@@ -1,0 +1,87 @@
+"""Roofline table from dry-run JSON records (deliverable g).
+
+Reads results/dryrun/*.json (produced by repro.launch.dryrun) and
+emits the per-(arch x shape x mesh) table: three roofline terms in
+seconds, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs useful ratio,
+per-device memory fit, and the recommendation line.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HBM_LIMIT = 16 * 2 ** 30        # v5e per-chip
+
+
+def load(dirpath="results/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirpath, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def advice(rec) -> str:
+    """One sentence: what would move the dominant term down."""
+    rl = rec["roofline"]
+    b = rl["bottleneck"]
+    if b == "collective":
+        ag = rl["per_kind"].get("all-gather", 0)
+        ar = rl["per_kind"].get("all-reduce", 0)
+        if ag > ar:
+            return ("all-gather dominated: FSDP weight re-gather per "
+                    "microbatch/remat pass; fewer microbatches, gather-"
+                    "once-per-step, or wider model axis")
+        return ("all-reduce dominated: TP activation reductions; larger "
+                "per-device work or comm/compute overlap")
+    if b == "memory":
+        if rec.get("useful_ratio", 1) < 0.2:
+            return ("memory bound with low useful ratio: small model on "
+                    "many chips; fuse more, increase per-device batch")
+        return ("memory bound: elementwise/attention traffic; bf16 "
+                "intermediates and larger fusion regions")
+    return "compute bound: near roofline; kernel-level tuning next"
+
+
+def table(rows):
+    hdr = (f"{'arch':26s} {'shape':12s} {'mesh':6s} {'ok':7s} "
+           f"{'comp_s':>9s} {'mem_s':>9s} {'coll_s':>9s} {'bound':>10s} "
+           f"{'useful':>6s} {'peakGiB':>8s} {'fit':>4s}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        if r["status"] == "skipped":
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} "
+                         f"{r['mesh']:6s} skipped ({r['reason'][:60]})")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:26s} {r['shape']:12s} "
+                         f"{r['mesh']:6s} ERROR   {r.get('error','')[:70]}")
+            continue
+        rl = r["roofline"]
+        peak = r["memory"]["peak_bytes_est"]
+        fit = "yes" if peak <= HBM_LIMIT else "NO"
+        lines.append(
+            f"{r['arch']:26s} {r['shape']:12s} {r['mesh']:6s} ok      "
+            f"{rl['compute_s']:9.3f} {rl['memory_s']:9.3f} "
+            f"{rl['collective_s']:9.3f} {rl['bottleneck']:>10s} "
+            f"{r['useful_ratio']:6.3f} {peak/2**30:8.2f} {fit:>4s}")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load()
+    if not rows:
+        print("no dry-run records found; run python -m repro.launch.dryrun")
+        return []
+    print(table(rows))
+    print()
+    for r in rows:
+        if r["status"] == "ok":
+            print(f"{r['arch']}/{r['shape']}/{r['mesh']}: {advice(r)}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,106 @@
+"""Table 1 analog: multiplication vs division throughput across
+precisions (the paper's central evaluation).
+
+The paper fixes Num Bits x Num Insts = 2^32 on an A100; on this CPU
+container we keep the same *structure* (batched instances, prec(u) =
+M-2, prec(v) uniform in [2, M/2] -- maximal Refine iterations) with
+Num Bits x Num Insts = 2^24 so wall times stay in seconds.  Columns:
+
+  bits, insts, mul_ms, div_ms, div/mul ratio, GMP-proxy (Python-int)
+  speedup, and exactness check vs Python divmod.
+
+The div/mul ratio is the paper's cost-model metric: Sec 2.3 predicts
+[5, 7] full multiplications for the size-adaptive algorithm; the
+fixed-shape JAX v1 executes every Refine iteration at full width, so
+its ratio is higher -- the windowed variant (ops-level bucketing,
+EXPERIMENTS.md SPerf) closes the gap toward the model.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bigint as bi
+from repro.core import shinv as S
+from repro.kernels import ops as K
+
+BUDGET_BITS = 1 << 22          # Num Bits x Num Insts
+MAX_INSTS = 256
+
+
+def _bench(fn, *args, reps=3):
+    fn(*args)                   # compile + warmup
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        ts.append(time.perf_counter() - t0)
+    return min(ts)
+
+
+def make_dataset(rng, m, insts):
+    us, vs = [], []
+    for _ in range(insts):
+        us.append(bi._rand_big(rng, bi.BASE ** (m - 3), bi.BASE ** (m - 2)))
+        kv = int(rng.integers(2, m // 2 + 1))
+        vs.append(bi._rand_big(rng, bi.BASE ** (kv - 1), bi.BASE ** kv))
+    return (jnp.asarray(bi.batch_from_ints(us, m)),
+            jnp.asarray(bi.batch_from_ints(vs, m)), us, vs)
+
+
+def run(sizes=(2 ** 10, 2 ** 12, 2 ** 14, 2 ** 16), validate=True,
+        impl="blocked"):
+    rng = np.random.default_rng(0)
+    rows = []
+    for bits in sizes:
+        m = bi.width_for_bits(bits)
+        insts = min(max(BUDGET_BITS // bits, 4), MAX_INSTS)
+        u, v, us, vs = make_dataset(rng, m, insts)
+
+        mul = jax.jit(jax.vmap(
+            lambda a, b: K.mul(a, b, 2 * m, impl=impl)))
+        t_mul = _bench(mul, u, v)
+
+        div = jax.jit(lambda a, b: S.divmod_batch(a, b, impl=impl))
+        t_div = _bench(div, u, v)
+
+        # GMP proxy: Python ints (exact, highly optimized C)
+        t0 = time.perf_counter()
+        py = [divmod(a, b) for a, b in zip(us, vs)]
+        t_py = time.perf_counter() - t0
+
+        ok = True
+        if validate:
+            q, r = div(u, v)
+            for (qq, rr), (qe, re_) in zip(
+                    zip(bi.batch_to_ints(q), bi.batch_to_ints(r)), py):
+                if (qq, rr) != (qe, re_):
+                    ok = False
+                    break
+        rows.append({
+            "bits": bits, "insts": insts,
+            "mul_ms": t_mul * 1e3, "div_ms": t_div * 1e3,
+            "div_over_mul": t_div / t_mul,
+            "py_int_ms": t_py * 1e3,
+            "exact": ok,
+        })
+    return rows
+
+
+def main():
+    rows = run()
+    print("bits,insts,mul_ms,div_ms,div_over_mul,py_int_ms,exact")
+    for r in rows:
+        print(f"{r['bits']},{r['insts']},{r['mul_ms']:.1f},"
+              f"{r['div_ms']:.1f},{r['div_over_mul']:.2f},"
+              f"{r['py_int_ms']:.1f},{r['exact']}")
+    assert all(r["exact"] for r in rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: the paper's algorithm in five lines, then a peek inside.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import bigint as bi
+from repro.core import shinv as S
+from repro.core import pyref as R
+
+# -- 1. exact division of 4096-bit integers on the JAX path -------------
+M = 256                                   # 256 limbs x 16 bit = 4096 bits
+rng = np.random.default_rng(0)
+u = bi._rand_big(rng, 0, bi.BASE ** M)
+v = bi._rand_big(rng, 1, bi.BASE ** (M // 2))
+
+q, r = S.divmod_batch(jnp.asarray(bi.batch_from_ints([u], M)),
+                      jnp.asarray(bi.batch_from_ints([v], M)))
+q, r = bi.batch_to_ints(q)[0], bi.batch_to_ints(r)[0]
+assert (q, r) == divmod(u, v)
+print(f"4096-bit division exact: q has {q.bit_length()} bits, "
+      f"r has {r.bit_length()} bits")
+
+# -- 2. the whole shifted inverse itself (Theorem 2) ---------------------
+w = R.shinv(27183, 15, 10)                # paper Example 1, base 10
+print(f"shinv_15(27183) = {w} (paper: 36787698193)")
+assert w in (10 ** 15 // 27183, 10 ** 15 // 27183 + 1)
+
+# -- 3. the cost model: how many full multiplications? -------------------
+c = R.CostCounter()
+R.divmod_shinv(u, v, bi.BASE, c)
+n = c.n_full_mults(M) + sum(1 for rec in c.records
+                            if rec.where == "div-u*shinv"
+                            and rec.prec_out > M)
+print(f"full multiplications used: {n} (paper Sec 2.3 predicts 5-7)")
+print(f"work in units of one full MxM product: "
+      f"{c.full_mult_equivalents(M):.2f}")

@@ -1,0 +1,195 @@
+"""Linear-cost multi-precision primitives in pure JAX (single instance).
+
+All functions operate on fixed-width little-endian uint32 limb vectors
+(base 2^16) and are written per-instance; batch via `jax.vmap`.
+
+Mapping from the paper's CUDA building blocks:
+
+  paper (CUDA, Fig. 1 / Listings)        here (JAX)
+  -------------------------------------  --------------------------------
+  cpyGlb2Reg coalesced staging           XLA layout; nothing to do
+  shift via shared-memory staging        roll + validity mask
+  scanBlk warp/block inclusive scan      lax.associative_scan
+  CarryOP / LTop 2-bit encoded ops       (generate, propagate) int pairs
+  subtraction map-scan-map               same composition, assoc. scan
+  sub of B^bpow via atomicMin ripple     vectorized lowest-nonzero mask
+  lt via LTop scan                       suffix-equality mask + any()
+
+Multiplication (quadratic) lives in repro.kernels (Pallas + jnp oracle);
+this module imports only its public entry points lazily to avoid cycles.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .bigint import BASE, LOG_BASE, MASK, DTYPE
+
+_U = jnp.uint32
+
+
+def prec(u: jax.Array) -> jax.Array:
+    """Number of significant limbs (0 for zero). int32 scalar."""
+    nz = u != 0
+    top = u.shape[0] - 1 - jnp.argmax(nz[::-1]).astype(jnp.int32)
+    return jnp.where(jnp.any(nz), top + 1, 0).astype(jnp.int32)
+
+
+def shift(u: jax.Array, n) -> jax.Array:
+    """Whole shift by n limbs (n>0: times B^n, n<0: floor-div by B^-n)."""
+    m = u.shape[0]
+    n = jnp.asarray(n, jnp.int32)
+    idx = jnp.arange(m, dtype=jnp.int32)
+    src = idx - n
+    rolled = jnp.roll(u, n)
+    return jnp.where((src >= 0) & (src < m), rolled, _U(0))
+
+
+def _carry_scan(gen: jax.Array, prop: jax.Array) -> jax.Array:
+    """Exclusive scan of (generate, propagate) carry pairs -> carry-in."""
+    def op(a, b):
+        ga, pa = a
+        gb, pb = b
+        return gb | (pb & ga), pa & pb
+    g, _ = jax.lax.associative_scan(op, (gen, prop))
+    # exclusive: carry into limb i is the inclusive result at i-1
+    return jnp.concatenate([jnp.zeros((1,), g.dtype), g[:-1]])
+
+
+def add(u: jax.Array, v: jax.Array) -> jax.Array:
+    """(u + v) mod B^m. Width-preserving; callers size widths to fit."""
+    s = u + v                                  # <= 2^17, exact in uint32
+    gen = (s >> LOG_BASE).astype(jnp.int32)    # in {0, 1}
+    prop = (s == _U(MASK)).astype(jnp.int32)
+    c = _carry_scan(gen, prop).astype(_U)
+    return (s + c) & _U(MASK)
+
+
+def add_scalar(u: jax.Array, d) -> jax.Array:
+    """u + d for a small scalar d (< B)."""
+    inc = jnp.zeros_like(u).at[0].set(_U(d) if not hasattr(d, "dtype") else
+                                      jnp.asarray(d, _U))
+    return add(u, inc)
+
+
+def sub(u: jax.Array, v: jax.Array) -> jax.Array:
+    """(u - v) mod B^m (exact when u >= v). Map-scan-map, Listing 1.5."""
+    d = u - v                                  # uint32 wraparound ok
+    gen = (u < v).astype(jnp.int32)            # borrow generated
+    prop = (u == v).astype(jnp.int32)          # borrow propagates
+    b = _carry_scan(gen, prop).astype(_U)
+    return (d - b) & _U(MASK)
+
+
+def sub_scalar(u: jax.Array, d) -> jax.Array:
+    dec = jnp.zeros_like(u).at[0].set(jnp.asarray(d, _U))
+    return sub(u, dec)
+
+
+def sub_pow(u: jax.Array, p) -> jax.Array:
+    """u - B^p, specialized (paper Listing 1.3): decrement all limbs in
+    [p, n] where n is the lowest nonzero limb index >= p."""
+    m = u.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    p = jnp.asarray(p, jnp.int32)
+    cand = (u != 0) & (idx >= p)
+    n = jnp.where(jnp.any(cand), jnp.argmax(cand).astype(jnp.int32),
+                  jnp.int32(m))
+    dec = (idx >= p) & (idx <= n)
+    return jnp.where(dec, (u - _U(1)) & _U(MASK), u)
+
+
+def lt(u: jax.Array, v: jax.Array) -> jax.Array:
+    """u < v (bool scalar). LTop reduction, vectorized."""
+    ne = u != v
+    # number of differing limbs strictly above i
+    above = jnp.cumsum(ne[::-1])[::-1] - ne.astype(jnp.int32)
+    deciding = ne & (above == 0)
+    return jnp.any(deciding & (u < v))
+
+
+def ge(u: jax.Array, v: jax.Array) -> jax.Array:
+    return ~lt(u, v)
+
+
+def eq(u: jax.Array, v: jax.Array) -> jax.Array:
+    return jnp.all(u == v)
+
+
+def is_zero(u: jax.Array) -> jax.Array:
+    return ~jnp.any(u != 0)
+
+
+def ge_pow(u: jax.Array, p) -> jax.Array:
+    """u >= B^p  <=>  prec(u) > p."""
+    return prec(u) > jnp.asarray(p, jnp.int32)
+
+
+def gt_pow(u: jax.Array, p) -> jax.Array:
+    """u > B^p."""
+    return ge_pow(u, p) & ~eq_pow(u, p)
+
+
+def eq_pow(u: jax.Array, p) -> jax.Array:
+    """u == B^p."""
+    m = u.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    p = jnp.asarray(p, jnp.int32)
+    return jnp.all(jnp.where(idx == p, u == _U(1), u == _U(0)))
+
+
+def is_pow(u: jax.Array) -> jax.Array:
+    """u == B^k for some k (single nonzero limb equal to 1)."""
+    nz = (u != 0).astype(jnp.int32)
+    return (jnp.sum(nz) == 1) & jnp.any(u == _U(1))
+
+
+def neg_mod_pow(p_limbs: jax.Array, L) -> jax.Array:
+    """B^L - P for 0 < P < B^L: complement limbs below L, then +1."""
+    m = p_limbs.shape[0]
+    idx = jnp.arange(m, dtype=jnp.int32)
+    L = jnp.asarray(L, jnp.int32)
+    comp = jnp.where(idx < L, _U(MASK) - p_limbs, _U(0))
+    return add_scalar(comp, 1)
+
+
+def mask_below(u: jax.Array, L) -> jax.Array:
+    """u mod B^L."""
+    idx = jnp.arange(u.shape[0], dtype=jnp.int32)
+    return jnp.where(idx < jnp.asarray(L, jnp.int32), u, _U(0))
+
+
+def resolve_carries(raw: jax.Array) -> jax.Array:
+    """Canonicalize a vector of raw limb sums (each < 2^31) to base-2^16
+    digits.  Two local split passes reduce carries to {0,1}, then one
+    associative generate/propagate scan finishes (cf. Listing 1.6)."""
+    d = raw & _U(MASK)
+    c = raw >> LOG_BASE                        # < 2^15
+    e = d + shift(c, 1)                        # < 2^17
+    d2 = e & _U(MASK)
+    c2 = e >> LOG_BASE                         # in {0,1}
+    f = d2 + shift(c2, 1)                      # <= 2^16
+    gen = (f >> LOG_BASE).astype(jnp.int32)
+    prop = (f == _U(MASK)).astype(jnp.int32)
+    carry = _carry_scan(gen, prop).astype(_U)
+    return (f + carry) & _U(MASK)
+
+
+def ceil_log2(n) -> jax.Array:
+    """ceil(log2(n)) for int scalar n >= 1 (exact for n < 2^24)."""
+    n = jnp.asarray(n, jnp.int32)
+    nf = jnp.maximum(n, 1).astype(jnp.float32)
+    fl = jnp.floor(jnp.log2(nf)).astype(jnp.int32)
+    # correct any float rounding, then ceil
+    fl = jnp.where(jnp.left_shift(1, fl + 1) <= n, fl + 1, fl)
+    fl = jnp.where(jnp.left_shift(1, fl) > n, fl - 1, fl)
+    return fl + jnp.where(jnp.left_shift(1, fl) < n, 1, 0)
+
+
+def take_limb(u: jax.Array, i) -> jax.Array:
+    """u[i] with i traced (0 when out of range)."""
+    i = jnp.asarray(i, jnp.int32)
+    safe = jnp.clip(i, 0, u.shape[0] - 1)
+    val = jax.lax.dynamic_index_in_dim(u, safe, keepdims=False)
+    return jnp.where((i >= 0) & (i < u.shape[0]), val, _U(0))

@@ -1,0 +1,235 @@
+"""Whole-shifted-inverse division in JAX (Algorithms 1-3 of the paper).
+
+Single-instance functions over fixed-width limb vectors; batch with
+`jax.vmap`, distribute with pjit (see repro.launch / repro.serving).
+
+JAX adaptation notes (vs. the CUDA implementation in the paper):
+
+  * Fixed shapes: CUDA dispatches variable-size multiplications to
+    statically specialized kernels at runtime.  Tracing requires static
+    shapes, so v1 executes every Refine iteration at full width W and
+    masks inactive instances; the size-bucketed variant (static window
+    per unrolled iteration, mirroring the paper's effMul<BLOCK, Q>
+    specialization) is the `windowed=True` path -- see EXPERIMENTS.md
+    SPerf for the measured effect.
+  * The Refine loop has a static trip count ceil(log2(M)) + 2 (the
+    paper's own fixed-count formulation, line 19 of Algorithm 1) and is
+    unrolled at trace time; per-instance convergence is handled with
+    `where` masks, exactly like warp-divergence-free SIMD execution.
+  * Scalar bookkeeping (h, k, l, m, s, g) are traced int32 scalars.
+  * The initial 4-by-2-digit quotient B^3 quo V is computed exactly in
+    uint32 (no 64-bit hardware integers on TPU): one wrap-around 32/32
+    division plus a 16-step restoring division, all vectorizable.
+
+Sign handling and the delta in {-1,0,+1} quotient correction follow the
+paper's revised Theorem 2.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .bigint import BASE, LOG_BASE, MASK, DTYPE, one_hot_pow
+from . import arith as A
+from repro.kernels import ops as K
+
+_U = jnp.uint32
+_I = jnp.int32
+
+GUARD = 2   # guard digits g (paper: Refine line 16)
+PAD = 8     # extra limbs of internal headroom above M
+
+
+def _initial_w0(V: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Exact floor(B^3 / V) for V in [B, B^2), as three base-B limbs.
+
+    q1 = floor(2^32 / V) via wrap-around uint32 division;
+    q2 = floor((2^32 mod V) * 2^16 / V) via 16-step restoring division.
+    """
+    V = jnp.maximum(V, _U(1))
+    q1 = (_U(0) - V) // V + _U(1)            # floor(2^32 / V), exact
+    r1 = _U(0) - q1 * V                      # 2^32 - q1*V (mod 2^32), < V
+    t = r1
+    q2 = _U(0)
+    for _ in range(LOG_BASE):
+        ovf = t >= _U(1 << 31)
+        t = t << 1                           # wraps; ovf remembers bit 32
+        geq = ovf | (t >= V)
+        t = jnp.where(geq, t - V, t)         # wrap-correct when ovf
+        q2 = (q2 << 1) | geq.astype(_U)
+    # w0 = q1 * B + q2  (q1 <= 2^16, so three limbs suffice)
+    return q2 & _U(MASK), q1 & _U(MASK), q1 >> LOG_BASE
+
+
+def _powdiff(v, w, h, l, *, width, impl):
+    """(sign, x = |B^h - v*w|) per Algorithm 2.  v, w: (width,) limbs.
+
+    One full product serves both the full and the close branch (the
+    close product only saves work at the kernel level; the Pallas
+    mulmod kernel skips high blocks when the static window allows it).
+    """
+    w2 = 2 * width
+    pv, pw = A.prec(v), A.prec(w)
+    L = pv + pw - l + 1
+    p = K.mul(v, w, w2, impl=impl)
+
+    full = A.is_zero(v) | A.is_zero(w) | (L >= h)
+    # ---- full branch: compare p with B^h
+    sign_full = A.prec(p) <= h               # p < B^h  (p == B^h -> mag 0)
+    mag_pos = A.neg_mod_pow(p, h)[:width]    # B^h - p   (needs p < B^h)
+    mag_neg = A.sub_pow(p, h)[:width]        # p - B^h   (Listing 1.3)
+    x_full = jnp.where(sign_full, mag_pos, mag_neg)
+    x_full = jnp.where(A.is_zero(v) | A.is_zero(w),
+                       one_hot_pow(h, width), x_full)   # |B^h - 0|
+    # ---- close branch: P = (v*w) mod B^L, sign from top digit of P
+    P = A.mask_below(p, L)[:width]
+    p_zero = A.is_zero(P)
+    p_top = A.take_limb(P, L - 1)
+    sign_close = p_zero | (p_top != 0)
+    x_close = jnp.where(p_zero, jnp.zeros((width,), _U),
+                        jnp.where(p_top == 0, P, A.neg_mod_pow(P, L)[:width]))
+
+    sign = jnp.where(full, sign_full, sign_close)
+    x = jnp.where(full, x_full, x_close)
+    return sign, x
+
+
+def _step(h, v, w, m, l, g, *, width, impl):
+    """One Newton iteration (Algorithm 1, Step), floor-exact."""
+    w2 = 2 * width
+    sign, x = _powdiff(v, w, h - m, l - g, width=width, impl=impl)
+    tmp = K.mul(w, x, w2, impl=impl)
+    sh = A.shift(tmp, 2 * m - h)[:width]      # 2m-h <= 0 always here
+    wm = A.shift(w, m)
+    res_pos = A.add(wm, sh)
+    res_neg = A.sub(wm, sh)
+    # floor correction: dropped limbs of tmp nonzero -> one more off
+    drop = h - 2 * m
+    idx = jnp.arange(w2, dtype=_I)
+    dropped_nz = jnp.any((idx < drop) & (tmp != 0))
+    res_neg = jnp.where(dropped_nz, A.sub_scalar(res_neg, 1), res_neg)
+    return jnp.where(sign, res_pos, res_neg)
+
+
+def _refine(v, h, k, w, *, width, iters_max, impl, windowed=True):
+    """Guarded shorter-iterate/divisor-prefix refinement loop.
+
+    windowed=True is the JAX analogue of the paper's statically
+    specialized variable-size multiplications (effMul<BLOCK, q>):
+    iteration i provably satisfies l <= 2^i + 1, so all its operands
+    fit a static window of 2^(i+1)+16 limbs; each unrolled iteration
+    traces its multiplications at that width.  Work becomes a geometric
+    series sum_i (2^i)^2 ~ (4/3) M^2 instead of log2(M) * M^2, which is
+    what restores the paper's 5-7 full-multiplication cost model.
+    (Size-bound proof sketch: the full PowDiff branch only triggers for
+    l <= g+3 where indices are < 32; the close branch bounds every
+    value by B^L with L <= 2l+2g+2 < window; the w*x product fits the
+    doubled window since 3*2^i+12 < 4*2^i+32.)
+    """
+    g = GUARD
+    l = jnp.asarray(2, _I)
+    w = A.shift(w, g)
+    hk = h - k
+    need = jnp.where(hk - 1 >= 2, A.ceil_log2(jnp.maximum(hk - 1, 1)),
+                     0) + 2
+    for i in range(iters_max):
+        wi = min(max(32, 2 ** (i + 1) + 16), width) if windowed else width
+        active = i < need
+        m = jnp.clip(jnp.minimum(hk + 1 - l, l), 0, None)
+        s = jnp.maximum(0, k - 2 * l + 1 - g)
+        v_pre = A.shift(v, -s)[:wi]
+        w_new = _step(k + l + m - s + g, v_pre, w[:wi], m, l, g,
+                      width=wi, impl=impl)
+        w_new = A.shift(w_new, -1)
+        if wi < width:
+            w_new = jnp.concatenate(
+                [w_new, jnp.zeros((width - wi,), w_new.dtype)])
+        w = jnp.where(active, w_new, w)
+        l = jnp.where(active, l + m - 1, l)
+    return A.shift(w, h - k - l - g)
+
+
+def shinv_fixed(v: jax.Array, h: jax.Array, *, iters_max: int,
+                impl: str | None = None,
+                windowed: bool = True) -> jax.Array:
+    """shinv_h(v) + lambda, lambda in {0,1} (Theorem 2). v: (W,) limbs,
+    h: int32 scalar (may be traced)."""
+    width = v.shape[0]
+    h = jnp.asarray(h, _I)
+
+    # lift single-limb v: floor(B^(h+1) / vB) == floor(B^h / v)
+    small = A.prec(v) <= 1
+    v_eff = jnp.where(small, A.shift(v, 1), v)
+    h_eff = h + small.astype(_I)
+    k = A.prec(v_eff) - 1
+
+    # ---- special cases (guarantee B < v <= B^h / 2 for the general path)
+    two_v = A.add(v_eff, v_eff)
+    case_zero = A.gt_pow(v_eff, h_eff)                   # v >  B^h -> 0
+    case_one = A.gt_pow(two_v, h_eff) & ~case_zero       # 2v > B^h -> 1
+    case_pow = A.is_pow(v_eff)                           # v == B^k -> B^(h-k)
+
+    # ---- initial approximation from the two most significant limbs
+    V = A.take_limb(v_eff, k - 1) + (A.take_limb(v_eff, k) << LOG_BASE)
+    d0, d1, d2 = _initial_w0(V)
+    w0 = jnp.zeros((width,), _U).at[0].set(d0).at[1].set(d1).at[2].set(d2)
+
+    w = _refine(v_eff, h_eff, k, w0, width=width, iters_max=iters_max,
+                impl=impl, windowed=windowed)
+
+    w = jnp.where(case_pow, one_hot_pow(h_eff - k, width), w)
+    w = jnp.where(case_one, one_hot_pow(0, width), w)
+    w = jnp.where(case_zero, jnp.zeros((width,), _U), w)
+    return w
+
+
+def divmod_fixed(u: jax.Array, v: jax.Array,
+                 impl: str | None = None,
+                 windowed: bool = True) -> tuple[jax.Array, jax.Array]:
+    """(q, r) with u = q*v + r, 0 <= r < v.  u, v: (M,) limb vectors.
+
+    Algorithm 3 with the revised delta in {-1, 0, +1} correction.
+    """
+    m_limbs = u.shape[0]
+    width = m_limbs + PAD
+    iters_max = math.ceil(math.log2(max(m_limbs, 2))) + 2
+    uw = jnp.zeros((width,), _U).at[:m_limbs].set(u.astype(_U))
+    vw = jnp.zeros((width,), _U).at[:m_limbs].set(v.astype(_U))
+
+    h = A.prec(uw)
+    si = shinv_fixed(vw, h, iters_max=iters_max, impl=impl,
+                     windowed=windowed)
+    p = K.mul(uw, si, 2 * width, impl=impl)      # double-precision product
+    q = A.shift(p, -h)[:width]
+    mm = K.mul(vw, q, width, impl=impl)          # v*q fits width
+
+    d_neg = A.lt(uw, mm)                         # delta = -1
+    q = jnp.where(d_neg, A.sub_scalar(q, 1), q)
+    mm = jnp.where(d_neg, A.sub(mm, vw), mm)
+    r = A.sub(uw, mm)
+    d_pos = A.ge(r, vw)                          # delta = +1
+    q = jnp.where(d_pos, A.add_scalar(q, 1), q)
+    r = jnp.where(d_pos, A.sub(r, vw), r)
+    return q[:m_limbs], r[:m_limbs]
+
+
+@partial(jax.jit, static_argnames=("impl", "windowed"))
+def divmod_batch(u: jax.Array, v: jax.Array, impl: str | None = None,
+                 windowed: bool = True):
+    """Batched division: u, v of shape (batch, M)."""
+    return jax.vmap(
+        lambda a, b: divmod_fixed(a, b, impl=impl, windowed=windowed)
+    )(u, v)
+
+
+@partial(jax.jit, static_argnames=("iters_max", "impl"))
+def shinv_batch(v: jax.Array, h: jax.Array, iters_max: int,
+                impl: str | None = None):
+    """Batched whole shifted inverse: v (batch, W), h (batch,)."""
+    return jax.vmap(
+        lambda vv, hh: shinv_fixed(vv, hh, iters_max=iters_max, impl=impl)
+    )(v, h)

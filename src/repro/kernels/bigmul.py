@@ -1,0 +1,220 @@
+"""Pallas TPU kernel for classical multi-precision multiplication.
+
+TPU-native adaptation of the paper's Fig. 2 block-scheduled quadratic
+multiplication:
+
+  CUDA (paper)                          TPU Pallas (here)
+  ------------------------------------  --------------------------------
+  one instance per CUDA block           one instance per grid row (vmap)
+  operands staged in shared memory      operand tiles in VMEM (BlockSpec)
+  per-thread Q-element digit loops      (T x 2T) Toeplitz tiles on the MXU
+  64-bit digits                         16-bit limbs split to 8-bit
+                                        sub-digits; int32 accumulation
+  warp shuffles for carries             separate associative-scan pass
+
+The product is a convolution of base-2^8 sub-digit sequences.  It is
+blocked into T-sized tiles; each (i, j) block pair contributes
+u_i (1 x T) @ Toep(v_j) (T x 2T) to output diagonal d = i + j.  A
+scalar-prefetched schedule walks the pairs grouped by diagonal so the
+output tile stays resident in VMEM and is accumulated in int32 across
+the pairs of its diagonal (grid revisiting).
+
+The kernel emits per-diagonal raw sums; overlap-add, carry resolution
+(one associative scan) and 16-bit limb packing happen in plain XLA --
+they are linear-cost, memory-bound passes.
+
+Exactness: sub-digits < 2^8, tile products < 2^16 * T, a diagonal
+accumulates at most min(nu, nv) tiles: max raw value
+min(nu,nv) * T * 255^2 < 2^31 for operands up to 2^18 bits.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.bigint import MASK
+from .ops import _to_u8digits, _resolve8, _pack8, BLOCK_T
+
+_I = jnp.int32
+_U = jnp.uint32
+
+
+def _toeplitz_host(v8: jax.Array, nv: int, t: int) -> jax.Array:
+    """(nv*t,) sub-digits -> (nv, t, 2t) Toeplitz tiles (XLA gather).
+
+    Toep[j, c, s] = v8[j*t + s - c] when 0 <= s - c < t else 0.
+    Built outside the kernel: a memory-bound gather that XLA fuses;
+    the kernel consumes the tiles with pure MXU matmuls.
+    """
+    vg = jnp.concatenate([jnp.zeros((t,), _I), v8.astype(_I),
+                          jnp.zeros((t,), _I)])
+    j = jnp.arange(nv, dtype=_I)[:, None, None]
+    c = jnp.arange(t, dtype=_I)[None, :, None]
+    s = jnp.arange(2 * t, dtype=_I)[None, None, :]
+    tile = jnp.take(vg, j * t + s - c + t, axis=0)
+    return jnp.where((s - c >= 0) & (s - c < t), tile, 0)
+
+
+def _pair_schedule(nu: int, nv: int) -> tuple[np.ndarray, ...]:
+    """Static schedule: all (i, j) block pairs sorted by diagonal d=i+j.
+
+    Returns (i_idx, j_idx, d_idx, first_flag) int32 arrays of length
+    nu*nv; first_flag marks the first pair of each diagonal (output
+    tile must be zero-initialized on revisit-entry).
+    """
+    pairs = [(i + j, i, j) for i in range(nu) for j in range(nv)]
+    pairs.sort()
+    d_idx = np.array([p[0] for p in pairs], dtype=np.int32)
+    i_idx = np.array([p[1] for p in pairs], dtype=np.int32)
+    j_idx = np.array([p[2] for p in pairs], dtype=np.int32)
+    first = np.ones(len(pairs), dtype=np.int32)
+    first[1:] = (d_idx[1:] != d_idx[:-1]).astype(np.int32)
+    return i_idx, j_idx, d_idx, first
+
+
+def _mul_kernel(i_ref, j_ref, d_ref, f_ref, u_ref, t_ref, o_ref):
+    """One grid step: accumulate u_i @ Toep(v_j) into diagonal tile.
+
+    i/j/d/f_ref are the scalar-prefetched schedule (SMEM); u/t/o are the
+    VMEM tiles selected by the BlockSpec index maps."""
+    p = pl.program_id(0)
+    tile = jnp.dot(u_ref[0, :][None, :], t_ref[0],
+                   preferred_element_type=_I)     # (1, 2t) MXU product
+
+    @pl.when(f_ref[p] == 1)
+    def _init():
+        o_ref[0, :] = tile[0, :]
+
+    @pl.when(f_ref[p] == 0)
+    def _acc():
+        o_ref[0, :] = o_ref[0, :] + tile[0, :]
+
+
+def _mul_pallas_raw(u8b: jax.Array, toep: jax.Array, nu: int, nv: int,
+                    t: int, interpret: bool) -> jax.Array:
+    """Grid over diagonal-sorted block pairs -> (ndiag, 2t) raw sums."""
+    i_idx, j_idx, d_idx, first = _pair_schedule(nu, nv)
+    ndiag = nu + nv - 1
+    return _call_pair_kernel(u8b, toep, i_idx, j_idx, d_idx, first,
+                             ndiag, t, interpret)
+
+
+def _call_pair_kernel(u8b, toep, i_idx, j_idx, d_idx, first, ndiag, t,
+                      interpret):
+    """pallas_call over a static diagonal-sorted pair schedule.
+
+    The schedule rides in SMEM via scalar prefetch; the BlockSpec index
+    maps read it to pick the (u_i, Toep_j, diag_d) tiles per grid step.
+    Consecutive steps of one diagonal revisit the same output block, so
+    it stays resident in VMEM and accumulates in int32.
+    """
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(len(i_idx),),
+        in_specs=[
+            pl.BlockSpec((1, t), lambda p, i, j, d, f: (i[p], 0)),
+            pl.BlockSpec((1, t, 2 * t), lambda p, i, j, d, f: (j[p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2 * t), lambda p, i, j, d, f: (d[p], 0)),
+    )
+    return pl.pallas_call(
+        _mul_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((ndiag, 2 * t), _I),
+        interpret=interpret,
+    )(jnp.asarray(i_idx), jnp.asarray(j_idx), jnp.asarray(d_idx),
+      jnp.asarray(first), u8b, toep)
+
+
+def mul_pallas(u: jax.Array, v: jax.Array, out_width: int,
+               interpret: bool | None = None) -> jax.Array:
+    """Exact u*v mod B^out_width via the Pallas kernel (single instance).
+
+    interpret defaults to True off-TPU (CPU validation mode).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t = BLOCK_T
+    u8 = _to_u8digits(u.astype(_U))
+    v8 = _to_u8digits(v.astype(_U))
+    nu = max(-(-u8.shape[0] // t), 1)
+    nv = max(-(-v8.shape[0] // t), 1)
+    u8 = jnp.zeros((nu * t,), _U).at[: u8.shape[0]].set(u8)
+    v8 = jnp.zeros((nv * t,), _U).at[: v8.shape[0]].set(v8)
+
+    u8b = u8.reshape(nu, t).astype(_I)
+    toep = _toeplitz_host(v8, nv, t)
+    seg = _mul_pallas_raw(u8b, toep, nu, nv, t, interpret)   # (ndiag, 2t)
+
+    ndiag = nu + nv - 1
+    n8 = (ndiag + 1) * t
+    raw = jnp.zeros((n8,), _I)
+    raw = raw.at[: ndiag * t].add(seg[:, :t].reshape(-1))
+    raw = raw.at[t:].add(seg[:, t:].reshape(-1))
+    raw = raw.astype(_U)
+
+    wo8 = 2 * out_width
+    if n8 < wo8:
+        raw = jnp.concatenate([raw, jnp.zeros((wo8 - n8,), _U)])
+    else:
+        raw = raw[:wo8]
+    return _pack8(_resolve8(raw))
+
+
+def mulmod_pallas(u: jax.Array, v: jax.Array, l_max: int,
+                  out_width: int, interpret: bool | None = None) -> jax.Array:
+    """Close product: (u*v) mod B^l_max computed with only the low
+    diagonals (the paper's MULTMOD work saving, Algorithm 2).
+
+    l_max is a STATIC bound in base-2^16 limbs; only block diagonals
+    that can touch sub-digits < 2*l_max are scheduled.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    t = BLOCK_T
+    u8 = _to_u8digits(u.astype(_U))
+    v8 = _to_u8digits(v.astype(_U))
+    nu = max(-(-u8.shape[0] // t), 1)
+    nv = max(-(-v8.shape[0] // t), 1)
+    # diagonals d contribute outputs starting at d*t: keep d*t < 2*l_max*?
+    d_keep = -(-2 * l_max // t)                    # ceil
+    nu_k = min(nu, d_keep)
+    nv_k = min(nv, d_keep)
+    u8 = jnp.zeros((nu_k * t,), _U).at[: min(u8.shape[0], nu_k * t)].set(
+        u8[: nu_k * t])
+    v8 = jnp.zeros((nv_k * t,), _U).at[: min(v8.shape[0], nv_k * t)].set(
+        v8[: nv_k * t])
+
+    u8b = u8.reshape(nu_k, t).astype(_I)
+    toep = _toeplitz_host(v8, nv_k, t)
+
+    i_idx, j_idx, d_idx, first = _pair_schedule(nu_k, nv_k)
+    keep = d_idx < d_keep                          # high diagonals skipped
+    i_idx, j_idx, d_idx = i_idx[keep], j_idx[keep], d_idx[keep]
+    first = np.ones(len(d_idx), dtype=np.int32)
+    first[1:] = (d_idx[1:] != d_idx[:-1]).astype(np.int32)
+
+    ndiag = int(d_idx.max()) + 1 if len(d_idx) else 1
+    seg = _call_pair_kernel(u8b, toep, i_idx, j_idx, d_idx, first,
+                            ndiag, t, interpret)
+
+    n8 = (ndiag + 1) * t
+    raw = jnp.zeros((n8,), _I)
+    raw = raw.at[: ndiag * t].add(seg[:, :t].reshape(-1))
+    raw = raw.at[t:].add(seg[:, t:].reshape(-1))
+    raw = raw.astype(_U)
+
+    wo8 = 2 * out_width
+    if n8 < wo8:
+        raw = jnp.concatenate([raw, jnp.zeros((wo8 - n8,), _U)])
+    else:
+        raw = raw[:wo8]
+    limbs = _pack8(_resolve8(raw))
+    idx = jnp.arange(out_width, dtype=_I)
+    return jnp.where(idx < l_max, limbs, _U(0))

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for the multiplication kernels.
+
+`mul_ref` is the schoolbook digit-loop product: a lax.scan over the
+limbs of `u`, each step doing one vector multiply-add against `v`.
+Exact for operands up to 2^15 limbs (raw accumulator < 2^32), i.e.
+comfortably past the paper's largest 2^18-bit size.  O(M) sequential
+steps -- slow, but bit-exact and simple: this is the oracle the Pallas
+kernel and the blocked einsum implementation are validated against.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bigint import LOG_BASE, MASK
+from repro.core.arith import resolve_carries, mask_below
+
+_U = jnp.uint32
+
+
+def mul_ref(u: jax.Array, v: jax.Array, out_width: int) -> jax.Array:
+    """Exact product of two limb vectors, truncated to out_width limbs.
+
+    The truncation is modular (mod B^out_width); callers size widths so
+    the true product fits.
+    """
+    wo = out_width
+    v_pad = jnp.zeros((wo,), _U).at[: min(v.shape[0], wo)].set(
+        v[: min(v.shape[0], wo)])
+    idx = jnp.arange(wo, dtype=jnp.int32)
+
+    def body(acc, xs):
+        ui, i = xs
+        p = ui * v_pad                       # < 2^32, exact
+        lo = p & _U(MASK)
+        hi = p >> LOG_BASE
+        src_lo = idx - i
+        src_hi = idx - i - 1
+        acc = acc + jnp.where((src_lo >= 0) & (src_lo < wo),
+                              jnp.roll(lo, i), _U(0))
+        acc = acc + jnp.where((src_hi >= 0) & (src_hi < wo),
+                              jnp.roll(hi, i + 1), _U(0))
+        return acc, None
+
+    n = u.shape[0]
+    acc, _ = jax.lax.scan(
+        body, jnp.zeros((wo,), _U),
+        (u.astype(_U), jnp.arange(n, dtype=jnp.int32)))
+    return resolve_carries(acc)
+
+
+def mulmod_ref(u: jax.Array, v: jax.Array, L, out_width: int) -> jax.Array:
+    """(u * v) mod B^L (close product oracle), L may be traced."""
+    return mask_below(mul_ref(u, v, out_width), L)

@@ -1,0 +1,261 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import anywhere: jax locks
+# the device count at first initialization.  512 host devices back the
+# 16x16 single-pod and 2x16x16 multi-pod production meshes.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this:
+  1. builds the production mesh (16x16 "data","model"; multi-pod adds a
+     leading "pod"=2 axis),
+  2. eval_shape's params / optimizer state / decode caches (ShapeDtype-
+     Struct only -- nothing is allocated),
+  3. jits the train_step or serve_step with full in/out shardings and
+     donation, .lower().compile()s it,
+  4. records memory_analysis(), cost_analysis(), and the while-aware
+     HLO-parsed roofline terms (repro.utils.hlo_costs) to JSON.
+
+A cell that fails to compile (sharding mismatch, OOM at compile,
+unsupported collective) is a bug in the framework, not in the cell.
+
+Usage:
+  python -m repro.launch.dryrun --arch smollm-135m --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+"""
+
+import argparse
+import json
+import math
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import SHAPES, cell_applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as SP
+from repro.models import transformer as T
+from repro.models.sharding import use_mesh
+from repro.optim import adamw
+from repro.train.step import make_train_step, make_serve_step, \
+    make_prefill_step
+from repro.utils import hlo_costs
+
+
+def microbatch_policy(cfg, shape, mesh) -> int:
+    """Grad-accumulation factor chosen so activation memory fits 16GB
+    HBM.  The per-microbatch batch MUST stay divisible by the total
+    data-parallel degree, otherwise the batch dim cannot shard and
+    every device would redundantly compute the whole microbatch."""
+    if shape.kind != "train":
+        return 1
+    dp = mesh.shape["data"] * mesh.shape.get("pod", 1)
+    tokens = shape.global_batch * shape.seq_len
+    if cfg.d_model >= 12000:
+        per_mb = 65536
+    elif cfg.d_model >= 6144:
+        per_mb = 131072
+    else:
+        per_mb = 262144
+    mb = max(1, tokens // per_mb)
+    mb = min(mb, shape.global_batch // dp)    # keep batch shardable
+    while mb > 1 and (shape.global_batch % mb
+                      or (shape.global_batch // mb) % dp):
+        mb -= 1
+    return max(mb, 1)
+
+
+def _save_hlo(path_base: str, text: str) -> None:
+    """zstd-compressed optimized HLO next to the JSON record, so the
+    roofline can be re-derived without recompiling."""
+    try:
+        import zstandard as zstd
+        with open(path_base + ".hlo.zst", "wb") as f:
+            f.write(zstd.ZstdCompressor(level=6).compress(text.encode()))
+    except Exception:                            # noqa: BLE001
+        pass
+
+
+def load_hlo(path_base: str) -> str:
+    import zstandard as zstd
+    with open(path_base + ".hlo.zst", "rb") as f:
+        return zstd.ZstdDecompressor().decompress(f.read()).decode()
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               opt_state_dtype: str | None = None,
+               hlo_path_base: str | None = None,
+               mb_override: int | None = None):
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "multi" if multi_pod else "single",
+                "status": "skipped", "reason": why}
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "multi" if multi_pod else "single",
+              "mesh_shape": dict(mesh.shape), "status": "?"}
+    t0 = time.time()
+    with use_mesh(mesh):
+        params_shape = jax.eval_shape(
+            lambda: T.init_params(cfg, jax.random.PRNGKey(0)))
+        p_shard = SP.param_shardings(cfg, mesh, params_shape)
+        avals, in_shard = SP.input_specs(cfg, shape, mesh)
+
+        if shape.kind == "train":
+            sdt = opt_state_dtype or (
+                "bfloat16" if cfg.n_params() > 5e10 else "float32")
+            opt_cfg = adamw.AdamWConfig(state_dtype=sdt)
+            opt_shape = jax.eval_shape(
+                lambda p: adamw.init_state(p, opt_cfg), params_shape)
+            o_shard = SP.opt_state_shardings(cfg, mesh, opt_shape, p_shard)
+            mb = mb_override or microbatch_policy(cfg, shape, mesh)
+            record["microbatches"] = mb
+            record["opt_state_dtype"] = sdt
+            gdt = jnp.bfloat16 if os.environ.get("REPRO_BF16_GRADS") \
+                else jnp.float32
+            record["grad_accum_dtype"] = str(jnp.dtype(gdt))
+            step = make_train_step(cfg, opt_cfg, microbatches=mb,
+                                   param_shardings=p_shard,
+                                   grad_accum_dtype=gdt)
+            rep = NamedSharding(mesh, P())
+            fn = jax.jit(
+                step,
+                in_shardings=(p_shard, o_shard, in_shard),
+                out_shardings=(p_shard, o_shard,
+                               jax.tree.map(lambda _: rep,
+                                            {"ce": 0, "aux": 0, "loss": 0})),
+                donate_argnums=(0, 1))
+            lowered = fn.lower(params_shape, opt_shape, avals)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg)
+            vp = T.vocab_padded(cfg)
+            out_sh = NamedSharding(mesh, P(
+                None if shape.global_batch % mesh.shape["data"] else "data",
+                "model" if vp % mesh.shape["model"] == 0 else None))
+            fn = jax.jit(step, in_shardings=(p_shard, in_shard),
+                         out_shardings=out_sh)
+            lowered = fn.lower(params_shape, avals)
+        else:  # decode
+            step = make_serve_step(cfg)
+            vp = T.vocab_padded(cfg)
+            logit_sh = NamedSharding(mesh, P(
+                None if shape.global_batch % mesh.shape["data"] else "data",
+                "model" if vp % mesh.shape["model"] == 0 else None))
+            fn = jax.jit(
+                step,
+                in_shardings=(p_shard, in_shard["cache"],
+                              in_shard["batch"], in_shard["pos"]),
+                out_shardings=(logit_sh, in_shard["cache"]),
+                donate_argnums=(1,))
+            lowered = fn.lower(params_shape, avals["cache"],
+                               avals["batch"], avals["pos"])
+
+        record["lower_s"] = round(time.time() - t0, 1)
+        t1 = time.time()
+        compiled = lowered.compile()
+        record["compile_s"] = round(time.time() - t1, 1)
+
+        ma = compiled.memory_analysis()
+        record["memory"] = {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "alias_bytes": ma.alias_size_in_bytes,
+            "peak_bytes_est": ma.argument_size_in_bytes
+            + ma.output_size_in_bytes + ma.temp_size_in_bytes
+            - ma.alias_size_in_bytes,
+        }
+        ca = compiled.cost_analysis() or {}
+        record["xla_cost"] = {k: ca[k] for k in
+                              ("flops", "bytes accessed") if k in ca}
+        t2 = time.time()
+        hlo_text = compiled.as_text()
+        if hlo_path_base:
+            _save_hlo(hlo_path_base, hlo_text)
+        costs = hlo_costs.analyze(hlo_text)
+        terms = hlo_costs.roofline_terms(costs, ca)
+        record["analyze_s"] = round(time.time() - t2, 1)
+        record["roofline"] = {
+            k: terms[k] for k in
+            ("compute_s", "memory_s", "collective_s", "dot_flops",
+             "elem_flops", "bytes", "collective_bytes", "wire_bytes",
+             "bottleneck", "per_kind")}
+        record["trip_counts"] = terms["trip_counts"]
+        # model-flops ratio: 6*N*D (dense) / 6*N_active*D (MoE), per dev
+        n_act = cfg.n_active_params()
+        tokens = shape.global_batch * shape.seq_len \
+            if shape.kind != "decode" else shape.global_batch
+        model_flops = (6 if shape.kind == "train" else 2) * n_act * tokens
+        ndev = math.prod(mesh.shape.values())
+        record["model_flops_per_dev"] = model_flops / ndev
+        record["useful_ratio"] = (model_flops / ndev) / max(
+            terms["dot_flops"], 1.0)
+        record["status"] = "ok"
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--microbatches", type=int, default=None,
+                    help="override the per-cell grad-accumulation factor")
+    args = ap.parse_args()
+
+    archs = configs.list_archs() if args.all or not args.arch \
+        else [args.arch]
+    shapes = list(SHAPES) if args.all or not args.shape else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.out, exist_ok=True)
+    n_ok = n_skip = n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                path = os.path.join(args.out, tag + ".json")
+                if os.path.exists(path):
+                    print(f"[cached ] {tag}")
+                    continue
+                try:
+                    rec = lower_cell(arch, shape, mp,
+                                     hlo_path_base=path[:-5],
+                                     mb_override=args.microbatches)
+                except Exception as e:              # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": str(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                with open(path, "w") as f:
+                    json.dump(rec, f, indent=1, default=str)
+                st = rec["status"]
+                n_ok += st == "ok"
+                n_skip += st == "skipped"
+                n_fail += st == "error"
+                extra = ""
+                if st == "ok":
+                    m = rec["memory"]["peak_bytes_est"] / 2**30
+                    r = rec["roofline"]
+                    extra = (f"peak={m:.2f}GiB bottleneck={r['bottleneck']}"
+                             f" compile={rec['compile_s']}s")
+                elif st == "error":
+                    extra = rec["error"][:120]
+                print(f"[{st:7s}] {tag} {extra}", flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_fail} failed")
+    return 0 if n_fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state.  The production target is a TPU
+v5e pod of 16 x 16 = 256 chips ("data" x "model"); the multi-pod
+configuration stacks 2 pods on a leading "pod" axis used for DP (or
+pipeline stages, see repro.train.pipeline).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devs)}; the "
+            "dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count"
+            "=512 before importing jax")
+    return jax.make_mesh(shape, axes, devices=devs[:n])
+
+
+def make_host_mesh(shape=None, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    if shape is None:
+        shape = (n, 1)
+    return jax.make_mesh(shape, axes, devices=jax.devices()[: shape[0] * (
+        shape[1] if len(shape) > 1 else 1)])

@@ -1,0 +1,56 @@
+"""Re-derive roofline terms from saved .hlo.zst files (no recompile).
+
+  python -m repro.launch.reanalyze --dir results/dryrun
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.utils import hlo_costs
+
+
+def reanalyze_record(json_path: str) -> bool:
+    base = json_path[:-5]
+    hlo_path = base + ".hlo.zst"
+    if not os.path.exists(hlo_path):
+        return False
+    with open(json_path) as f:
+        rec = json.load(f)
+    if rec.get("status") != "ok":
+        return False
+    import zstandard as zstd
+    with open(hlo_path, "rb") as f:
+        text = zstd.ZstdDecompressor().decompress(f.read()).decode()
+    costs = hlo_costs.analyze(text)
+    terms = hlo_costs.roofline_terms(costs, rec.get("xla_cost"))
+    rec["roofline"] = {
+        k: terms[k] for k in
+        ("compute_s", "memory_s", "collective_s", "dot_flops",
+         "elem_flops", "bytes", "collective_bytes", "wire_bytes",
+         "bottleneck", "per_kind")}
+    rec["trip_counts"] = terms["trip_counts"]
+    rec["useful_ratio"] = rec["model_flops_per_dev"] / max(
+        terms["dot_flops"], 1.0)
+    with open(json_path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    args = ap.parse_args()
+    n = 0
+    for path in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        if reanalyze_record(path):
+            n += 1
+            print("reanalyzed", os.path.basename(path))
+    print(f"{n} records updated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,203 @@
+"""Parameter / input / cache sharding rules and ShapeDtypeStruct specs.
+
+``input_specs(cfg, shape)`` returns (avals, shardings) for every model
+input of an (architecture x input-shape) cell -- ShapeDtypeStruct
+stand-ins only, no device allocation -- exactly what
+``jax.jit(...).lower(...)`` needs for the multi-pod dry-run.
+
+Sharding policy (TP on "model", DP/FSDP on "data", DP on "pod"):
+  * embeddings / lm head : vocab on "model"
+  * attention q/o        : head dim on "model" (kv replicated if the
+                           kv-head count does not divide the axis)
+  * mlp / experts        : d_ff (and expert dim) on "model"
+  * FSDP                 : params additionally sharded over "data" on
+                           the first divisible dim (on by default for
+                           archs > 8B params)
+  * batch dims           : ("pod", "data"); when global_batch == 1
+                           (long_500k) the KV-cache sequence dim takes
+                           "data" instead (context parallelism)
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ModelConfig, ShapeCell
+from repro.models import transformer as T
+
+FSDP_THRESHOLD = 8e9
+
+
+def _div(n: int, mesh: Mesh, axis) -> bool:
+    if isinstance(axis, tuple):
+        size = 1
+        for a in axis:
+            size *= mesh.shape[a]
+    else:
+        if axis not in mesh.axis_names:
+            return False
+        size = mesh.shape[axis]
+    return n % size == 0 and n >= size
+
+
+def _batch_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def param_spec(path: str, shape, cfg, mesh, fsdp: bool) -> P:
+    """Sharding rule by parameter path substring.
+
+    Leaves under blocks/enc_blocks carry a leading layer-repeat axis
+    (scan stacking); the rule applies to the trailing dims and the
+    repeat axis stays unsharded.
+    """
+    def has(*keys):
+        return any(k in path for k in keys)
+
+    stacked = has("blocks/")
+    off = 1 if stacked else 0
+    body = shape[off:]
+    entries = [None] * len(body)
+    if has("embed", "lm_head"):
+        # (vocab_p, d) or (d, vocab_p): shard the vocab dim
+        vdim = 0 if body[0] > body[-1] else len(body) - 1
+        if len(body) == 2 and _div(body[vdim], mesh, "model"):
+            entries[vdim] = "model"
+    elif has("experts"):
+        if _div(body[0], mesh, "model"):
+            entries[0] = "model"          # expert parallelism
+        elif len(body) >= 2 and _div(body[-1], mesh, "model"):
+            entries[-1] = "model"
+    elif has("/wq", "/wk", "/wv", "/wg", "/wi", "in_proj", "x_proj",
+             "lora_a", "/wa", "/wr"):
+        if len(body) == 2 and _div(body[-1], mesh, "model"):
+            entries[-1] = "model"         # column parallel
+    elif has("/wo", "out_proj", "dt_proj", "/wb", "lora_b"):
+        if len(body) >= 2 and _div(body[0], mesh, "model"):
+            entries[0] = "model"          # row parallel
+    # norms, biases, scalars: replicated
+    if fsdp:
+        dsize = mesh.shape["data"]
+        for i, (e, n) in enumerate(zip(entries, body)):
+            if e is None and n % dsize == 0 and n >= dsize:
+                entries[i] = ("pod", "data") if "pod" in mesh.axis_names \
+                    and n % (dsize * mesh.shape["pod"]) == 0 else "data"
+                break
+    return P(*([None] * off + entries))
+
+
+def _tree_paths(tree) -> Any:
+    """Pytree of '/'-joined key paths."""
+    return jax.tree_util.tree_map_with_path(
+        lambda kp, _: "/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                               for k in kp), tree)
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape):
+    """NamedSharding tree for a params shape-tree (from eval_shape)."""
+    fsdp = cfg.n_params() > FSDP_THRESHOLD
+    paths = _tree_paths(params_shape)
+    return jax.tree.map(
+        lambda p, x: NamedSharding(
+            mesh, param_spec("/" + p, x.shape, cfg, mesh, fsdp)),
+        paths, params_shape)
+
+
+def opt_state_shardings(cfg, mesh, opt_shape, p_shardings):
+    """ZeRO-1: optimizer m/v inherit the param spec (incl. FSDP)."""
+    from repro.optim.adamw import zero1_spec
+    out = {"m": jax.tree.map(
+        lambda s, x: NamedSharding(mesh, zero1_spec(s.spec, x.shape, mesh)),
+        p_shardings, opt_shape["m"]),
+        "v": jax.tree.map(
+        lambda s, x: NamedSharding(mesh, zero1_spec(s.spec, x.shape, mesh)),
+        p_shardings, opt_shape["v"]),
+        "step": NamedSharding(mesh, P())}
+    return out
+
+
+def cache_shardings(cfg: ModelConfig, mesh: Mesh, cache_shape,
+                    global_batch: int):
+    """Decode-cache sharding.  Cache leaves carry a leading layer-repeat
+    axis: (R, B, ...).  Batch (dim 1) shards on ("pod","data") when
+    divisible; otherwise a long sequence dim (attn KV, dim 2) takes
+    "data" -- context parallelism for the long_500k cell.  One trailing
+    head/channel dim shards on "model" where divisible."""
+    batch_ok = _div(global_batch, mesh, _batch_axes(mesh))
+
+    def rule(x):
+        shape = x.shape
+        entries = [None] * len(shape)
+        if len(shape) <= 1:
+            return NamedSharding(mesh, P())
+        if batch_ok and _div(shape[1], mesh, _batch_axes(mesh)):
+            entries[1] = _batch_axes(mesh)
+        elif len(shape) >= 3 and shape[2] > 4096 \
+                and _div(shape[2], mesh, "data"):
+            entries[2] = "data"           # seq-sharded KV (context par.)
+        for i in range(2, len(shape)):
+            if entries[i] is None and _div(shape[i], mesh, "model"):
+                entries[i] = "model"
+                break
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree.map(rule, cache_shape)
+
+
+# ---------------------------------------------------------------------------
+# input avals + shardings per cell
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: ShapeCell, mesh: Mesh):
+    """(avals, shardings) for the step function of this cell.
+
+    train:   {tokens|embeds, labels[, enc_embeds]}
+    prefill: {tokens|embeds[, enc_embeds]}
+    decode:  ({token|embed}, cache, pos)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    ba = _batch_axes(mesh)
+    bspec = ba if _div(b, mesh, ba) else (
+        "data" if _div(b, mesh, "data") else None)
+
+    def tok(shp):
+        return jax.ShapeDtypeStruct(shp, jnp.int32)
+
+    def emb(shp):
+        return jax.ShapeDtypeStruct(shp, jnp.bfloat16)
+
+    if shape.kind in ("train", "prefill"):
+        avals: dict = {}
+        shard: dict = {}
+        if cfg.embed_stub and cfg.family != "encdec":
+            avals["embeds"] = emb((b, s, cfg.d_model))
+            shard["embeds"] = NamedSharding(mesh, P(bspec, None, None))
+        else:
+            avals["tokens"] = tok((b, s))
+            shard["tokens"] = NamedSharding(mesh, P(bspec, None))
+        if cfg.family == "encdec":
+            avals["enc_embeds"] = emb((b, cfg.enc_seq, cfg.d_model))
+            shard["enc_embeds"] = NamedSharding(mesh, P(bspec, None, None))
+        if shape.kind == "train":
+            avals["labels"] = tok((b, s))
+            shard["labels"] = NamedSharding(mesh, P(bspec, None))
+        return avals, shard
+
+    # decode: cache of seq_len, one new token
+    cache_shape = jax.eval_shape(lambda: T.init_cache(cfg, b, s))
+    cache_shard = cache_shardings(cfg, mesh, cache_shape, b)
+    if cfg.embed_stub and cfg.family != "encdec":
+        step_in = {"embed": emb((b, cfg.d_model))}
+        step_shard = {"embed": NamedSharding(mesh, P(bspec, None))}
+    else:
+        step_in = {"token": tok((b,))}
+        step_shard = {"token": NamedSharding(mesh, P(bspec))}
+    avals = {"batch": step_in, "cache": cache_shape,
+             "pos": jax.ShapeDtypeStruct((), jnp.int32)}
+    shard = {"batch": step_shard, "cache": cache_shard,
+             "pos": NamedSharding(mesh, P())}
+    return avals, shard

@@ -1,0 +1,62 @@
+"""Training launcher CLI.
+
+  python -m repro.launch.train --arch smollm-135m --steps 100 \
+      --batch 8 --seq 128 [--reduced] [--ckpt-dir /tmp/ck] [--resume]
+
+On this CPU container the full production configs are dry-run only;
+--reduced trains the same-family small variant for real.  On a TPU pod
+the same entry point runs the full config over the production mesh.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs
+from repro.data.synthetic import DataConfig
+from repro.models.sharding import use_mesh
+from repro.optim import adamw
+from repro.train.trainer import Trainer, TrainerConfig
+from repro.launch.mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True,
+                    choices=configs.list_archs())
+    ap.add_argument("--reduced", action="store_true",
+                    help="train the reduced same-family config")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh", action="store_true",
+                    help="run under a host-device mesh")
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    dc = DataConfig(vocab=cfg.vocab, seq_len=args.seq,
+                    global_batch=args.batch)
+    tc = TrainerConfig(steps=args.steps, ckpt_every=args.ckpt_every,
+                       ckpt_dir=args.ckpt_dir,
+                       microbatches=args.microbatches)
+    oc = adamw.AdamWConfig(lr=args.lr,
+                           warmup_steps=max(args.steps // 10, 1))
+    mesh = make_host_mesh() if args.mesh else None
+    with use_mesh(mesh):
+        tr = Trainer(cfg, oc, tc, dc)
+        state = tr.run()
+    print(f"final loss {state.losses[-1]:.4f} "
+          f"(start {state.losses[0]:.4f}); restarts={state.restarts}; "
+          f"stragglers={len(state.straggler_events)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,325 @@
+"""Shared transformer building blocks (functional, params-as-pytrees).
+
+Conventions:
+  * activations (B, S, D); weights stored in dicts of jnp arrays
+  * every init function takes an rng key and returns a pytree; apply
+    functions are pure
+  * sharding via repro.models.sharding.constrain -- no-ops on bare CPU
+  * dtype policy: params in cfg.param_dtype, compute in cfg.dtype
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, in_dim: int, out_dim: int, dtype) -> jax.Array:
+    scale = 1.0 / math.sqrt(in_dim)
+    return (jax.random.normal(key, (in_dim, out_dim), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, dim: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, dim), jnp.float32)
+            * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * params["scale"].astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(dim: int, dtype) -> dict:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(params, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings (standard + M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0) -> jax.Array:
+    return 1.0 / theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, hd), positions: (B, S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (B,S,hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array,
+                sections=(16, 24, 24), theta: float = 10000.0) -> jax.Array:
+    """Multimodal RoPE (Qwen2-VL): positions (3, B, S) for (t, h, w);
+    the head_dim/2 frequency slots are split across the 3 sections."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    half = hd // 2
+    sec = jnp.zeros((half,), jnp.int32)
+    off = 0
+    for i, s in enumerate(sections):
+        sec = jnp.where((jnp.arange(half) >= off)
+                        & (jnp.arange(half) < off + s), i, sec)
+        off += s
+    pos_sel = jnp.take(positions, sec, axis=0)          # (half, B, S)
+    ang = jnp.moveaxis(pos_sel, 0, -1).astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA), three execution paths
+# ---------------------------------------------------------------------------
+
+def attention_init(key, cfg) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d, cfg.n_heads * hd, cfg.param_dtype),
+        "wk": dense_init(ks[1], d, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wv": dense_init(ks[2], d, cfg.n_kv_heads * hd, cfg.param_dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * hd, d, cfg.param_dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.n_heads * hd,), cfg.param_dtype)
+        p["bk"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.param_dtype)
+        p["bv"] = jnp.zeros((cfg.n_kv_heads * hd,), cfg.param_dtype)
+    return p
+
+
+def _project_qkv(params, x, cfg, positions):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = x @ params["wq"].astype(x.dtype)
+    k = x @ params["wk"].astype(x.dtype)
+    v = x @ params["wv"].astype(x.dtype)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(x.dtype)
+        k = k + params["bk"].astype(x.dtype)
+        v = v + params["bv"].astype(x.dtype)
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.rope == "mrope":
+        if positions.ndim == 2:               # text-only: t == h == w
+            positions = jnp.broadcast_to(positions, (3,) + positions.shape)
+        q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+    elif cfg.rope == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "data", None, "model", None)
+    k = constrain(k, "data", None, "model", None)
+    v = constrain(v, "data", None, "model", None)
+    return q, k, v
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    """(B,S,Hkv,hd) -> (B,S,H,hd) by group replication."""
+    b, s, hkv, hd = k.shape
+    rep = n_heads // hkv
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, hkv, rep, hd)) \
+        .reshape(b, s, n_heads, hd)
+
+
+def attn_core_full(q, k, v, causal: bool = True):
+    """Materialized-scores attention core; q,k,v: (B,S,H,hd) (kv already
+    head-repeated).  Short sequences (<= ~4k)."""
+    hd = q.shape[-1]
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    return out
+
+
+def attn_full(params, x, cfg, positions, causal: bool = True):
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    k, v = _repeat_kv(k, cfg.n_heads), _repeat_kv(v, cfg.n_heads)
+    out = attn_core_full(q, k, v, causal)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attn_core_chunked(q, k, v, chunk: int = 1024, causal: bool = True):
+    """Flash-style online-softmax core: scans KV in chunks so the
+    (S x S) score matrix is never materialized.  Used for 32k prefill.
+    q,k,v: (B,S,H,hd), kv already head-repeated."""
+    b, s, h, hd = q.shape
+    chunk = min(chunk, s)
+    while s % chunk:               # shapes here are powers of two
+        chunk //= 2
+    scale = 1.0 / math.sqrt(hd)
+    nchunks = s // chunk
+    kc = k.reshape(b, nchunks, chunk, h, hd)
+    vc = v.reshape(b, nchunks, chunk, h, hd)
+    q32 = q.astype(jnp.float32) * scale
+    qpos = jnp.arange(s, dtype=jnp.int32)
+
+    def body(carry, xs):
+        acc, m, l = carry                     # (b,s,h,hd), (b,h,s), (b,h,s)
+        kj, vj, j = xs
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q32, kj.astype(jnp.float32))
+        if causal:
+            kpos = j * chunk + jnp.arange(chunk, dtype=jnp.int32)
+            mask = qpos[:, None] >= kpos[None, :]
+            logits = jnp.where(mask, logits, -1e30)
+        m_new = jnp.maximum(m, logits.max(-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(logits - m_new[..., None])
+        l_new = l * alpha + p.sum(-1)
+        acc = acc * alpha.transpose(0, 2, 1)[..., None] + jnp.einsum(
+            "bhqk,bkhd->bqhd", p, vj.astype(jnp.float32))
+        return (acc, m_new, l_new), None
+
+    init = (jnp.zeros((b, s, h, hd), jnp.float32),
+            jnp.full((b, h, s), -jnp.inf, jnp.float32),
+            jnp.zeros((b, h, s), jnp.float32))
+    (acc, m, l), _ = jax.lax.scan(
+        body, init,
+        (jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+         jnp.arange(nchunks, dtype=jnp.int32)))
+    out = acc / jnp.maximum(l, 1e-30).transpose(0, 2, 1)[..., None]
+    return out.astype(q.dtype)
+
+
+def attn_chunked(params, x, cfg, positions, chunk: int = 1024,
+                 causal: bool = True):
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    k, v = _repeat_kv(k, cfg.n_heads), _repeat_kv(v, cfg.n_heads)
+    out = attn_core_chunked(q, k, v, chunk, causal)
+    out = out.reshape(x.shape[0], x.shape[1], -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attn_decode(params, x, cfg, cache_k, cache_v, pos):
+    """Single-token decode against a (B, S_max, Hkv, hd) KV cache.
+    Returns (out, new_cache_k, new_cache_v).  pos: int32 scalar."""
+    b = x.shape[0]
+    hd = cfg.head_dim
+    positions = jnp.full((b, 1), pos, jnp.int32)
+    q, k, v = _project_qkv(params, x, cfg, positions)
+    cache_k = jax.lax.dynamic_update_slice(
+        cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0))
+    cache_v = jax.lax.dynamic_update_slice(
+        cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0))
+    kk = _repeat_kv(cache_k, cfg.n_heads)
+    vv = _repeat_kv(cache_v, cfg.n_heads)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) * scale
+    smax = cache_k.shape[1]
+    valid = jnp.arange(smax, dtype=jnp.int32)[None, None, None, :] <= pos
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vv.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, 1, -1)
+    return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+def cross_attention(params, x, enc_kv, cfg):
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k, v = enc_kv
+    k, v = _repeat_kv(k, cfg.n_heads), _repeat_kv(v, cfg.n_heads)
+    scale = 1.0 / math.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    out = out.astype(x.dtype).reshape(b, s, -1)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def encode_kv(params, enc_out, cfg):
+    """Precompute cross-attention K/V from encoder output."""
+    b, s, _ = enc_out.shape
+    hd = cfg.head_dim
+    k = (enc_out @ params["wk"].astype(enc_out.dtype)) \
+        .reshape(b, s, cfg.n_kv_heads, hd)
+    v = (enc_out @ params["wv"].astype(enc_out.dtype)) \
+        .reshape(b, s, cfg.n_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, cfg, d_ff: Optional[int] = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "swiglu":
+        return {"wi": dense_init(ks[0], d, f, cfg.param_dtype),
+                "wg": dense_init(ks[1], d, f, cfg.param_dtype),
+                "wo": dense_init(ks[2], f, d, cfg.param_dtype)}
+    return {"wi": dense_init(ks[0], d, f, cfg.param_dtype),
+            "wo": dense_init(ks[2], f, d, cfg.param_dtype)}
+
+
+def mlp(params, x, cfg):
+    h = x @ params["wi"].astype(x.dtype)
+    h = constrain(h, "data", None, "model")
+    if cfg.act == "swiglu":
+        g = x @ params["wg"].astype(x.dtype)
+        g = constrain(g, "data", None, "model")
+        h = jax.nn.silu(h) * g
+    elif cfg.act == "gelu":
+        h = jax.nn.gelu(h)
+    elif cfg.act == "relu2":                   # nemotron squared-ReLU
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(cfg.act)
+    out = h @ params["wo"].astype(x.dtype)
+    return constrain(out, "data", None, None)
+
+
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Mean CE over all positions; logits (B,S,V) f32-cast internally."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)

@@ -1,0 +1,249 @@
+"""Mamba (S6 selective SSM) block for the Jamba hybrid architecture.
+
+Training/prefill: selective scan over time via lax.scan (chunk-wise
+over tokens).  Decode: O(1) recurrent step with carried (conv window,
+SSM state) -- this is what keeps the long_500k decode cell linear.
+
+Also provides the SSD (Mamba-2-style) chunked variant: with a scalar
+decay per (head, token) the recurrence factors into causal matmuls
+(the (d,n)-coupled Mamba-1 decay does not), so the time dimension is
+processed in MXU-friendly chunks instead of a per-token scan --- the
+architectural fix for the jamba memory wall measured in EXPERIMENTS.md
+SPerf B.  Enable with REPRO_MAMBA2=1 (dry-run experiments) or
+cfg-level dispatch; it changes the architecture (Mamba-2 vs Mamba-1),
+so it is opt-in, never silently substituted.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .sharding import constrain
+
+D_CONV = 4       # causal conv kernel width
+D_STATE = 16     # SSM state dim per channel
+
+
+def mamba_init(key, cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_d_inner or 2 * d
+    dt_rank = max(d // 16, 1)
+    ks = jax.random.split(key, 7)
+    a_init = jnp.tile(jnp.arange(1, D_STATE + 1, dtype=jnp.float32)[None],
+                      (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg.param_dtype),
+        "conv_w": (jax.random.normal(ks[1], (D_CONV, di), jnp.float32)
+                   * 0.1).astype(cfg.param_dtype),
+        "conv_b": jnp.zeros((di,), cfg.param_dtype),
+        "x_proj": dense_init(ks[2], di, dt_rank + 2 * D_STATE,
+                             cfg.param_dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, di, cfg.param_dtype),
+        "dt_bias": jnp.full((di,), -4.6, cfg.param_dtype),   # softplus~0.01
+        "a_log": jnp.log(a_init).astype(jnp.float32),
+        "d_skip": jnp.ones((di,), cfg.param_dtype),
+        "out_proj": dense_init(ks[4], di, d, cfg.param_dtype),
+    }
+
+
+def _ssm_params(p, xc, cfg):
+    """xc: (B, S, di) post-conv activations -> (dt, Bmat, Cmat)."""
+    di = xc.shape[-1]
+    dt_rank = p["dt_proj"].shape[0]
+    proj = xc @ p["x_proj"].astype(xc.dtype)
+    dt, bmat, cmat = jnp.split(
+        proj, [dt_rank, dt_rank + D_STATE], axis=-1)
+    dt = jax.nn.softplus(
+        (dt @ p["dt_proj"].astype(xc.dtype)).astype(jnp.float32)
+        + p["dt_bias"].astype(jnp.float32))                  # (B,S,di)
+    return dt, bmat.astype(jnp.float32), cmat.astype(jnp.float32)
+
+
+def _ssd_chunked(xh, dt_h, a_h, bm, cm, chunk: int = 128):
+    """SSD (Mamba-2) chunked recurrence.
+
+    xh (B,T,H,hd), dt_h (B,T,H) post-softplus, a_h (H,) negative,
+    bm/cm (B,T,N).  State S_t = exp(dt_t a_h) S_{t-1} + dt_t B_t x_t^T;
+    y_t = S_t^T C_t.  Equivalent linear-attention form:
+      y_t = sum_{j<=t} exp(cum_t - cum_j) (C_t . B_j) dt_j x_j
+    i.e. causal matmuls within chunks + a short inter-chunk scan --
+    MXU-dominant, unlike the per-token Mamba-1 scan whose (d,n)-coupled
+    decay does not factor.
+    """
+    b, t, h, hd = xh.shape
+    n = bm.shape[-1]
+    nc = t // chunk
+    xt = (xh * dt_h[..., None]).reshape(b, nc, chunk, h, hd) \
+        .astype(jnp.float32)                          # dt-weighted values
+    logd = (dt_h * a_h).reshape(b, nc, chunk, h).astype(jnp.float32)
+    cum = jnp.cumsum(logd, axis=2)                    # (B,NC,C,H)
+    total = cum[:, :, -1]                             # (B,NC,H)
+    bmc = bm.reshape(b, nc, chunk, n).astype(jnp.float32)
+    cmc = cm.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    # intra-chunk: att[b,k,t,j,h] = exp(cum_t - cum_j)(C_t . B_j), j<=t
+    cb = jnp.einsum("bktn,bkjn->bktj", cmc, bmc)      # (B,NC,C,C)
+    dec = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))
+    att = jnp.where(tri[None, None, :, :, None], cb[..., None] * dec, 0.0)
+    intra = jnp.einsum("bktjh,bkjhd->bkthd", att, xt)
+
+    # inter-chunk: carry state (B,H,hd,N) across chunks
+    kdec = jnp.exp(total[:, :, None] - cum)           # decay to chunk end
+    kv = jnp.einsum("bkjh,bkjhd,bkjn->bkhdn", kdec, xt, bmc)
+
+    def carry(s, xs):
+        kvk, totk = xs                                # (B,H,hd,N),(B,H)
+        new = s * jnp.exp(totk)[..., None, None] + kvk
+        return new, s                                 # emit state BEFORE
+
+    s0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    _, states = jax.lax.scan(
+        carry, s0, (jnp.moveaxis(kv, 1, 0), jnp.moveaxis(total, 1, 0)))
+    states = jnp.moveaxis(states, 0, 1)               # entering chunk k
+    rdec = jnp.exp(cum)                               # decay from start
+    inter = jnp.einsum("bkth,bkhdn,bktn->bkthd", rdec, states, cmc)
+    return (intra + inter).reshape(b, t, h, hd)
+
+
+def _ssd_naive(xh, dt_h, a_h, bm, cm):
+    """Per-token oracle for the chunked SSD (tests)."""
+    b, t, h, hd = xh.shape
+    n = bm.shape[-1]
+
+    def step(s, xs):
+        x_t, dt_t, b_t, c_t = xs
+        a_t = jnp.exp(dt_t * a_h)                     # (B,H)
+        upd = jnp.einsum("bhd,bn->bhdn", x_t * dt_t[..., None], b_t)
+        s = s * a_t[..., None, None] + upd
+        y = jnp.einsum("bhdn,bn->bhd", s, c_t)
+        return s, y
+
+    s0 = jnp.zeros((b, h, hd, n), jnp.float32)
+    _, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(xh, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(dt_h, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(bm, 1, 0).astype(jnp.float32),
+         jnp.moveaxis(cm, 1, 0).astype(jnp.float32)))
+    return jnp.moveaxis(ys, 0, 1)
+
+
+SSD_HEAD_DIM = 64
+
+
+def ssd_enabled() -> bool:
+    return bool(os.environ.get("REPRO_MAMBA2"))
+
+
+def _mamba_ssd_train(p, xc, z, cfg):
+    """Mamba-2-style path reusing the Mamba-1 parameterization: the
+    per-channel decay is collapsed to a per-head scalar (mean of a_log
+    over the head's channels) so the recurrence factors into chunks."""
+    b, s, di = xc.shape
+    h = max(di // SSD_HEAD_DIM, 1)
+    hd = di // h
+    dt, bm, cm = _ssm_params(p, xc.astype(cfg.compute_dtype), cfg)
+    # scalar decay per head: mean over (head channels, state dim)
+    a_full = -jnp.exp(p["a_log"])                     # (di,N)
+    a_h = a_full.reshape(h, hd, -1).mean(axis=(1, 2))  # (H,)
+    dt_h = dt.reshape(b, s, h, hd).mean(-1)           # (B,S,H)
+    xh = xc.reshape(b, s, h, hd)
+    chunk = 128 if s % 128 == 0 and s >= 256 else max(s // 2, 1)
+    if s % chunk:
+        chunk = s
+    y = _ssd_chunked(xh, dt_h, a_h, bm[..., : bm.shape[-1]], cm,
+                     chunk=chunk).reshape(b, s, di)
+    y = y + xc * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(cfg.compute_dtype)
+            @ p["out_proj"].astype(cfg.compute_dtype)), None
+
+
+def mamba_apply(p, x, cfg, mode: str = "train", state=None):
+    """x: (B,S,D).  mode 'train' scans S; 'decode' uses carried state.
+
+    state (decode): dict(conv=(B, D_CONV-1, di), ssm=(B, di, D_STATE)).
+    Returns (y, new_state)."""
+    b, s, d = x.shape
+    di = p["d_skip"].shape[0]
+    xz = x @ p["in_proj"].astype(x.dtype)
+    xi, z = jnp.split(xz, 2, axis=-1)
+    xi = constrain(xi, "data", None, "model")
+
+    if mode == "decode":
+        conv_win = jnp.concatenate([state["conv"], xi], axis=1)
+        new_conv = conv_win[:, 1:]
+        xc = jnp.einsum("bkd,kd->bd", conv_win.astype(jnp.float32),
+                        p["conv_w"].astype(jnp.float32))
+        xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32))[:, None]
+        dt, bm, cm = _ssm_params(p, xc.astype(x.dtype), cfg)
+        a = -jnp.exp(p["a_log"])                             # (di, N)
+        da = jnp.exp(dt[:, 0, :, None] * a)                  # (B,di,N)
+        dbx = dt[:, 0, :, None] * bm[:, 0, None, :] \
+            * xc[:, 0].astype(jnp.float32)[..., None]
+        new_ssm = state["ssm"] * da + dbx
+        y = jnp.einsum("bdn,bn->bd", new_ssm, cm[:, 0])
+        y = y + xc[:, 0] * p["d_skip"].astype(jnp.float32)
+        y = (y[:, None] * jax.nn.silu(z.astype(jnp.float32)))
+        out = y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)
+        return out, {"conv": new_conv, "ssm": new_ssm}
+
+    # training / prefill: causal depthwise conv then selective scan
+    xpad = jnp.pad(xi, ((0, 0), (D_CONV - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i: i + s].astype(jnp.float32)
+             * p["conv_w"][i].astype(jnp.float32)
+             for i in range(D_CONV))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(jnp.float32))
+    if ssd_enabled():
+        return _mamba_ssd_train(p, xc, z, cfg)
+    dt, bm, cm = _ssm_params(p, xc.astype(x.dtype), cfg)
+    a = -jnp.exp(p["a_log"])                                 # (di,N)
+    # Per-step discretization happens INSIDE the scan body: the naive
+    # formulation materializes da/dbx as (B,S,di,N) tensors (2 x 8.6 GB
+    # per layer instance at the jamba train cell) and streams them; here
+    # the body reconstructs them from O(di)-sized slices, so the HBM
+    # traffic per step is the state (B,di,N) plus vectors.  Streams are
+    # bf16; the state stays f32.  (EXPERIMENTS.md SPerf, jamba cell.)
+    dt16 = dt.astype(jnp.bfloat16)
+    bm16 = bm.astype(jnp.bfloat16)
+    cm16 = cm.astype(jnp.bfloat16)
+    xc16 = xc.astype(jnp.bfloat16)
+
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs            # (B,di),(B,N),(B,N),(B,di)
+        dtf = dt_t.astype(jnp.float32)
+        da_t = jnp.exp(dtf[..., None] * a)                   # (B,di,N)
+        dbx_t = (dtf * x_t.astype(jnp.float32))[..., None] \
+            * b_t.astype(jnp.float32)[:, None, :]
+        h = h * da_t + dbx_t
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y.astype(jnp.bfloat16)
+
+    # Two-level scan with inner checkpoint: backward keeps only the
+    # T/CHUNK chunk-boundary states instead of one (B,di,N) state per
+    # token (measured: 85 GiB -> per-layer MBs at the jamba train cell);
+    # within a chunk the forward is recomputed.
+    CHUNK = 256
+
+    def chunk_body(h, xs_chunk):
+        return jax.lax.scan(step, h, xs_chunk)
+
+    streams = (jnp.moveaxis(dt16, 1, 0), jnp.moveaxis(bm16, 1, 0),
+               jnp.moveaxis(cm16, 1, 0), jnp.moveaxis(xc16, 1, 0))
+    h0 = jnp.zeros((b, di, D_STATE), jnp.float32)
+    if s % CHUNK == 0 and s > CHUNK:
+        chunked = jax.tree.map(
+            lambda t: t.reshape(s // CHUNK, CHUNK, *t.shape[1:]), streams)
+        _, ys = jax.lax.scan(jax.checkpoint(chunk_body), h0, chunked)
+        ys = ys.reshape(s, *ys.shape[2:])
+    else:
+        _, ys = jax.lax.scan(step, h0, streams)
+    y = jnp.moveaxis(ys, 0, 1).astype(jnp.float32)           # (B,S,di)
+    y = y + xc * p["d_skip"].astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return (y.astype(x.dtype) @ p["out_proj"].astype(x.dtype)), None

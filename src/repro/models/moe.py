@@ -1,0 +1,85 @@
+"""Top-k Mixture-of-Experts with capacity-based dispatch.
+
+Supports phi-3.5-MoE (16e top-2), Arctic (128e top-2 + dense residual)
+and Jamba (16e top-2).  Experts live on the "model" mesh axis (expert
+parallelism); tokens on "data".  The dispatch/combine scatters induce
+the all-to-all pattern under GSPMD.
+
+Capacity: C = ceil(top_k * T / E * capacity_factor).  Overflowing
+tokens are dropped (standard GShard semantics); the router uses a
+load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, mlp_init, mlp
+from .sharding import constrain
+
+
+def moe_init(key, cfg) -> dict:
+    ks = jax.random.split(key, cfg.n_experts + 1)
+    experts = [mlp_init(ks[i], cfg, d_ff=cfg.moe_d_ff)
+               for i in range(cfg.n_experts)]
+    # stack expert weights: (E, ...) leaves -- shardable on "model"
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *experts)
+    return {"router": dense_init(ks[-1], cfg.d_model, cfg.n_experts,
+                                 jnp.float32),
+            "experts": stacked}
+
+
+def moe_apply(params, x, cfg):
+    """x: (B, S, D) -> (B, S, D), plus aux load-balance loss."""
+    b, s, d = x.shape
+    t = b * s
+    e = cfg.n_experts
+    k = cfg.moe_top_k
+    cap = int(math.ceil(k * t / e * cfg.capacity_factor))
+    cap = max(cap, 4)
+
+    xt = x.reshape(t, d)
+    logits = (xt.astype(jnp.float32) @ params["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                  # (T, E)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, slot) within its expert via one-hot cumsum
+    onehot = jax.nn.one_hot(expert_ids, e, dtype=jnp.int32)  # (T, k, E)
+    flat_oh = onehot.reshape(t * k, e)
+    pos_in_e = jnp.cumsum(flat_oh, axis=0) * flat_oh         # 1-based
+    pos = (pos_in_e.sum(-1) - 1).reshape(t, k)               # (T, k)
+    keep = pos < cap
+
+    flat_idx = (expert_ids * cap + pos).reshape(-1)          # (T*k,)
+    flat_idx = jnp.where(keep.reshape(-1), flat_idx, e * cap)  # drop bucket
+
+    # dispatch: (E*C+1, D) buffer, last row is the drop bucket
+    disp = jnp.zeros((e * cap + 1, d), x.dtype)
+    disp = disp.at[flat_idx].add(
+        jnp.repeat(xt, k, axis=0), mode="drop")
+    disp = disp[: e * cap].reshape(e, cap, d)
+    disp = constrain(disp, "model", None, None)
+
+    # expert FFN, batched over E (sharded on "model")
+    def one_expert(pe, xe):
+        return mlp(pe, xe[None], cfg)[0]
+    out_e = jax.vmap(one_expert)(params["experts"], disp)    # (E, C, D)
+    out_e = constrain(out_e, "model", None, None)
+
+    # combine
+    flat_out = jnp.concatenate(
+        [out_e.reshape(e * cap, d), jnp.zeros((1, d), x.dtype)])
+    gathered = flat_out[flat_idx].reshape(t, k, d)
+    gathered = jnp.where(keep[..., None], gathered, 0)
+    out = (gathered * gate_vals[..., None].astype(x.dtype)).sum(1)
+
+    # load-balance aux loss (Switch-style)
+    frac_tokens = jnp.mean(onehot.sum(1).astype(jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(frac_tokens * frac_probs)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,195 @@
+"""RWKV-6 "Finch" blocks: attention-free time mix with data-dependent
+decay, plus channel mix.  Supports O(T) training scan, a chunked
+matmul-parallel form (GLA-style, the MXU-friendly path), and O(1)
+decode with recurrent state -- which is what makes the long_500k cell
+feasible for this family.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+from .sharding import constrain
+
+LORA_R = 32      # low-rank dims for the data-dependent pieces
+DECAY_R = 64
+
+
+def timemix_init(key, cfg) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    h = cfg.n_heads
+    return {
+        "mu": 0.5 * jnp.ones((5, d), cfg.param_dtype),       # r,k,v,w,g
+        "lora_a": dense_init(ks[0], d, LORA_R * 5, cfg.param_dtype),
+        "lora_b": (jax.random.normal(ks[1], (5, LORA_R, d), jnp.float32)
+                   * 0.01).astype(cfg.param_dtype),
+        "wr": dense_init(ks[2], d, d, cfg.param_dtype),
+        "wk": dense_init(ks[3], d, d, cfg.param_dtype),
+        "wv": dense_init(ks[4], d, d, cfg.param_dtype),
+        "wg": dense_init(ks[5], d, d, cfg.param_dtype),
+        "wo": dense_init(ks[6], d, d, cfg.param_dtype),
+        "w0": jnp.zeros((d,), cfg.param_dtype) - 6.0,        # decay bias
+        "wa": dense_init(ks[7], d, DECAY_R, cfg.param_dtype),
+        "wb": (jax.random.normal(ks[8], (DECAY_R, d), jnp.float32)
+               * 0.01).astype(cfg.param_dtype),
+        "u": (jax.random.normal(ks[9], (h, d // h), jnp.float32)
+              * 0.1).astype(cfg.param_dtype),                # bonus
+        "ln_x": jnp.ones((d,), cfg.param_dtype),
+    }
+
+
+def _ddlerp(p, x, x_prev):
+    """Data-dependent interpolation of x and shifted x (RWKV6)."""
+    base = x + (x_prev - x) * p["mu"][3].astype(x.dtype)     # w-channel mix
+    lora = jnp.tanh(base @ p["lora_a"].astype(x.dtype))
+    b, s, _ = lora.shape
+    lora = lora.reshape(b, s, 5, LORA_R)
+    adj = jnp.einsum("bsfr,frd->bsfd", lora.astype(jnp.float32),
+                     p["lora_b"].astype(jnp.float32)).astype(x.dtype)
+    mixed = []
+    for i in range(5):
+        mu_i = p["mu"][i].astype(x.dtype) + adj[:, :, i]
+        mixed.append(x + (x_prev - x) * mu_i)
+    return mixed                                             # r,k,v,w,g
+
+
+def _proj_rkvwg(p, x, x_prev, cfg):
+    xr, xk, xv, xw, xg = _ddlerp(p, x, x_prev)
+    h, hd = cfg.n_heads, cfg.d_model // cfg.n_heads
+    b, s, _ = x.shape
+    r = (xr @ p["wr"].astype(x.dtype)).reshape(b, s, h, hd)
+    k = (xk @ p["wk"].astype(x.dtype)).reshape(b, s, h, hd)
+    v = (xv @ p["wv"].astype(x.dtype)).reshape(b, s, h, hd)
+    g = jax.nn.silu(xg @ p["wg"].astype(x.dtype))
+    # data-dependent decay w in (0, 1): exp(-exp(.))
+    wlog = p["w0"].astype(jnp.float32) + (
+        jnp.tanh(xw.astype(jnp.float32) @ p["wa"].astype(jnp.float32))
+        @ p["wb"].astype(jnp.float32))
+    w = jnp.exp(-jnp.exp(wlog)).reshape(b, s, h, hd)
+    return r, k, v, w, g
+
+
+def _wkv_scan(r, k, v, w, u):
+    """Sequential WKV: state (B,H,hd,hd); out_t = r_t (S + u k_t v_t^T)."""
+    b, s, h, hd = r.shape
+
+    def step(state, xs):
+        rt, kt, vt, wt = xs                       # (B,H,hd)
+        kv = kt[..., :, None] * vt[..., None, :]  # (B,H,hd,hd)
+        out = jnp.einsum("bhi,bhij->bhj", rt, state + u[..., :, None] * kv)
+        state = state * wt[..., :, None] + kv
+        return state, out
+
+    xs32 = tuple(jnp.moveaxis(t, 1, 0).astype(jnp.float32)
+                 for t in (r, k, v, w))           # (S,B,H,hd) each
+    state0 = jnp.zeros((b, h, hd, hd), jnp.float32)
+    _, outs = jax.lax.scan(step, state0, xs32)
+    return jnp.moveaxis(outs, 0, 1)               # (B,S,H,hd)
+
+
+def _wkv_chunked(r, k, v, w, u, chunk: int = 64):
+    """Chunked-parallel WKV (GLA-style): intra-chunk via masked matmuls
+    with cumulative decay products; inter-chunk state via a short scan.
+    Matmul-heavy => MXU-friendly; trip count S/chunk instead of S."""
+    b, s, h, hd = r.shape
+    n = s // chunk
+    rc, kc, vc, wc = (t.astype(jnp.float32)
+                      .reshape(b, n, chunk, h, hd) for t in (r, k, v, w))
+    logw = jnp.log(jnp.maximum(wc, 1e-30))
+    cum = jnp.cumsum(logw, axis=2)                # inclusive within chunk
+    total = cum[:, :, -1]                         # (B,N,H,hd)
+
+    # intra-chunk: out_t += r_t * prod_{j<t} decays * k_j v_j
+    #   A[t, j] = exp(cum[t-1] - cum[j])  for j < t ; bonus at j == t
+    ri = rc * jnp.exp(cum - logw)                 # r_t * exp(cum_{t-1})
+    ki = kc * jnp.exp(-cum)                       # k_j * exp(-cum_j)
+    att = jnp.einsum("bnchd,bnjhd->bnhcj", ri, ki)
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    att = jnp.where(tri[None, None, None], att, 0.0)
+    intra = jnp.einsum("bnhcj,bnjhd->bnchd", att, vc)
+    bonus = jnp.einsum("bnchd,bnchd->bnch", rc * u[None, None, None], kc)
+    intra = intra + bonus[..., None] * vc
+
+    # inter-chunk: carry state across chunks
+    kdec = kc * jnp.exp(total[:, :, None] - cum)  # decay to chunk end
+    kv_chunk = jnp.einsum("bnchd,bnche->bnhde", kdec, vc)
+
+    def carry(state, xs):
+        kvn, totn = xs                            # (B,H,hd,hd), (B,H,hd)
+        new = state * jnp.exp(totn)[..., None] + kvn
+        return new, state
+
+    (_, states) = jax.lax.scan(
+        carry, jnp.zeros((b, h, hd, hd), jnp.float32),
+        (jnp.moveaxis(kv_chunk, 1, 0), jnp.moveaxis(total, 1, 0)))
+    states = jnp.moveaxis(states, 0, 1)           # state entering chunk n
+    rdec = rc * jnp.exp(cum - logw)               # decay from chunk start
+    inter = jnp.einsum("bnchd,bnhde->bnche", rdec, states)
+    return (intra + inter).reshape(b, s, h, hd)
+
+
+def timemix_apply(p, x, x_prev_token, cfg, mode: str = "chunked",
+                  state=None):
+    """mode: 'scan' | 'chunked' (training/prefill) | 'decode' (state)."""
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, d // cfg.n_heads
+    if x_prev_token is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([x_prev_token[:, None], x[:, :-1]], 1)
+    r, k, v, w, g = _proj_rkvwg(p, x, x_prev, cfg)
+    u = p["u"].astype(jnp.float32)
+
+    if mode == "decode":
+        # s == 1; state: (B, H, hd, hd)
+        rt = r[:, 0].astype(jnp.float32)
+        kt = k[:, 0].astype(jnp.float32)
+        vt = v[:, 0].astype(jnp.float32)
+        wt = w[:, 0].astype(jnp.float32)
+        kv = kt[..., :, None] * vt[..., None, :]
+        out = jnp.einsum("bhi,bhij->bhj", rt, state + u[..., :, None] * kv)
+        new_state = state * wt[..., :, None] + kv
+        out = out[:, None]                         # (B,1,H,hd)
+    elif mode == "chunked" and s % 64 == 0 and s >= 128:
+        out = _wkv_chunked(r, k, v, w, u)
+        new_state = None
+    else:
+        out = _wkv_scan(r, k, v, w, u)
+        new_state = None
+
+    # group norm over heads, then gate and output proj
+    outf = out.reshape(b, -1, h, hd)
+    mu = outf.mean(-1, keepdims=True)
+    var = ((outf - mu) ** 2).mean(-1, keepdims=True)
+    outf = (outf - mu) * jax.lax.rsqrt(var + 1e-5)
+    outf = outf.reshape(b, -1, d) * p["ln_x"].astype(jnp.float32)
+    y = (outf.astype(x.dtype) * g) @ p["wo"].astype(x.dtype)
+    return constrain(y, "data", None, None), new_state
+
+
+def channelmix_init(key, cfg) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 3)
+    return {"mu_k": 0.5 * jnp.ones((d,), cfg.param_dtype),
+            "mu_r": 0.5 * jnp.ones((d,), cfg.param_dtype),
+            "wk": dense_init(ks[0], d, f, cfg.param_dtype),
+            "wv": dense_init(ks[1], f, d, cfg.param_dtype),
+            "wr": dense_init(ks[2], d, d, cfg.param_dtype)}
+
+
+def channelmix_apply(p, x, x_prev_token, cfg):
+    if x_prev_token is None:
+        x_prev = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        x_prev = jnp.concatenate([x_prev_token[:, None], x[:, :-1]], 1)
+    mk = p["mu_k"].astype(x.dtype)
+    mr = p["mu_r"].astype(x.dtype)
+    xk = x + (x_prev - x) * mk
+    xr = x + (x_prev - x) * mr
+    kk = jnp.square(jax.nn.relu(xk @ p["wk"].astype(x.dtype)))
+    kk = constrain(kk, "data", None, "model")
+    kv = kk @ p["wv"].astype(x.dtype)
+    return jax.nn.sigmoid(xr @ p["wr"].astype(x.dtype)) * kv

@@ -1,0 +1,103 @@
+"""Sharding-constraint helpers usable from inside model code.
+
+Model code calls ``constrain(x, "data", None, "model")`` at key points;
+when a mesh context is active (set by the launcher / dry-run), this
+becomes a ``with_sharding_constraint``; on a bare CPU test it is a
+no-op.  Axes that do not divide the corresponding mesh-axis size are
+dropped silently (e.g. kv_heads=8 on a model axis of 16 stays
+replicated, matching Megatron-style GQA KV replication).
+
+"data" expands to ("pod", "data") on a multi-pod mesh so the batch is
+sharded across pods as well (pure DP between pods by default; the
+pipeline trainer re-purposes the pod axis instead).
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+
+def set_mesh(mesh: Optional[Mesh]) -> None:
+    global _MESH
+    _MESH = mesh
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    global _MESH
+    prev = _MESH
+    _MESH = mesh
+    try:
+        if mesh is not None:
+            with mesh:
+                yield
+        else:
+            yield
+    finally:
+        _MESH = prev
+
+
+def _expand(axis):
+    """'data' -> ('pod', 'data') when the mesh has a pod axis."""
+    if _MESH is None:
+        return axis
+    names = _MESH.axis_names
+    if axis == "data" and "pod" in names:
+        return ("pod", "data")
+    return axis
+
+
+def _axis_size(axis) -> int:
+    if isinstance(axis, tuple):
+        n = 1
+        for a in axis:
+            n *= _MESH.shape[a]
+        return n
+    return _MESH.shape[axis]
+
+
+def spec_for(x_shape, *axes) -> P:
+    """PartitionSpec with non-dividing axes dropped."""
+    entries = []
+    for dim, axis in enumerate(axes):
+        if axis is None or _MESH is None:
+            entries.append(None)
+            continue
+        axis = _expand(axis)
+        names = axis if isinstance(axis, tuple) else (axis,)
+        if any(a not in _MESH.axis_names for a in names):
+            entries.append(None)
+            continue
+        size = _axis_size(axis)
+        if x_shape[dim] % size == 0 and x_shape[dim] >= size:
+            entries.append(axis)
+        else:
+            entries.append(None)
+    return P(*entries)
+
+
+def constrain(x: jax.Array, *axes) -> jax.Array:
+    """with_sharding_constraint if a mesh is active, else identity."""
+    if _MESH is None:
+        return x
+    if len(axes) < x.ndim:
+        axes = axes + (None,) * (x.ndim - len(axes))
+    spec = spec_for(x.shape, *axes)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_MESH, spec))
+
+
+def named_sharding(*spec_entries) -> Optional[NamedSharding]:
+    if _MESH is None:
+        return None
+    return NamedSharding(_MESH, P(*spec_entries))

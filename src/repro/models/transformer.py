@@ -1,0 +1,413 @@
+"""Model assembly: init / train / prefill / decode for every family.
+
+Families:
+  dense | moe      -- decoder-only transformer (GQA, RoPE/M-RoPE)
+  ssm              -- RWKV-6 (attention-free)
+  hybrid           -- Jamba (Mamba + attention 1:7, MoE every other layer)
+  encdec           -- Whisper (encoder + causal decoder w/ cross-attn)
+
+Layer stacking: layers are grouped into a repeating *pattern* (length 1
+for uniform stacks, 8 for Jamba) and the repeats are executed with
+``lax.scan`` over parameters stacked on a leading repeat axis.  This
+bounds activation liveness structurally (the while-loop body reuses its
+buffers -- XLA cannot hoist across iterations, unlike plain remat which
+CSE can undo), keeps the HLO size O(pattern) instead of O(depth) for
+the 96-layer dry-run cells, and the roofline extractor multiplies the
+body costs by the trip count (repro.utils.hlo_costs).
+
+Public API (all pure functions):
+  init_params(cfg, key)                      -> params pytree
+  forward_train(params, batch, cfg)          -> (loss, metrics)
+  init_cache(cfg, batch, seq_len)            -> decode-state pytree
+  forward_decode(params, cache, batch, pos, cfg) -> (logits, cache)
+  forward_prefill(params, batch, cfg)        -> last-token logits
+
+The vocab is padded to a multiple of 256 so embedding/logits shard on
+the "model" mesh axis (Megatron-style); the padded tail is masked out
+of the softmax.  Cross-entropy is computed in sequence chunks so the
+full (B, S, V) logits tensor is never materialized.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+from . import moe as MOE
+from . import rwkv as RWKV
+from . import mamba as MAMBA
+from .sharding import constrain
+
+CE_CHUNK = 512
+
+
+def vocab_padded(cfg) -> int:
+    return -(-cfg.vocab // 256) * 256
+
+
+# ---------------------------------------------------------------------------
+# repeating block pattern
+# ---------------------------------------------------------------------------
+
+def block_pattern(cfg) -> list[tuple[str, str]]:
+    """[(mixer, ffn)] for one repeat unit."""
+    if cfg.family == "ssm":
+        return [("rwkv", "rwkv_cm")]
+    if cfg.family == "hybrid" and cfg.layer_pattern:
+        me = max(cfg.moe_every, 1)
+        return [("attn" if c == "a" else "mamba",
+                 ("moe" if cfg.n_experts and i % me == me - 1 else "mlp"))
+                for i, c in enumerate(cfg.layer_pattern)]
+    if cfg.n_experts:
+        me = max(cfg.moe_every, 1)
+        ffn_kind = "moe+mlp" if cfg.dense_residual else "moe"
+        if me == 1:
+            return [("attn", ffn_kind)]
+        return [("attn", ffn_kind if i % me == me - 1 else "mlp")
+                for i in range(me)]
+    return [("attn", "mlp")]
+
+
+def n_repeats(cfg) -> int:
+    plen = len(block_pattern(cfg))
+    assert cfg.n_layers % plen == 0, (cfg.name, cfg.n_layers, plen)
+    return cfg.n_layers // plen
+
+
+def _norm_init(cfg):
+    return (L.rmsnorm_init(cfg.d_model, cfg.param_dtype)
+            if cfg.norm == "rmsnorm"
+            else L.layernorm_init(cfg.d_model, cfg.param_dtype))
+
+
+def _norm(cfg, p, x):
+    return L.rmsnorm(p, x) if cfg.norm == "rmsnorm" else L.layernorm(p, x)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _slot_init(key, cfg, mixer: str, ffn: str) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": _norm_init(cfg), "ln2": _norm_init(cfg)}
+    if mixer == "attn":
+        p["attn"] = L.attention_init(ks[0], cfg)
+    elif mixer == "mamba":
+        p["mamba"] = MAMBA.mamba_init(ks[0], cfg)
+    elif mixer == "rwkv":
+        p["tm"] = RWKV.timemix_init(ks[0], cfg)
+    if ffn == "mlp":
+        p["mlp"] = L.mlp_init(ks[1], cfg)
+    elif ffn == "moe":
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+    elif ffn == "moe+mlp":
+        p["moe"] = MOE.moe_init(ks[1], cfg)
+        p["mlp"] = L.mlp_init(ks[2], cfg)
+    elif ffn == "rwkv_cm":
+        p["cm"] = RWKV.channelmix_init(ks[1], cfg)
+    if cfg.family == "encdec":
+        p["xattn"] = L.attention_init(ks[3], cfg)
+        p["ln_x"] = _norm_init(cfg)
+    return p
+
+
+def _rep_init(key, cfg) -> dict:
+    pattern = block_pattern(cfg)
+    ks = jax.random.split(key, len(pattern))
+    return {f"slot{i}": _slot_init(ks[i], cfg, *pattern[i])
+            for i in range(len(pattern))}
+
+
+def init_params(cfg, key) -> dict:
+    vp = vocab_padded(cfg)
+    reps = n_repeats(cfg)
+    ks = jax.random.split(key, 8)
+    params: dict = {"final_ln": _norm_init(cfg)}
+    params["embed"] = L.embed_init(ks[0], vp, cfg.d_model, cfg.param_dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[1], cfg.d_model, vp,
+                                         cfg.param_dtype)
+    rep_list = [_rep_init(jax.random.fold_in(ks[2], r), cfg)
+                for r in range(reps)]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *rep_list)
+    if cfg.family == "encdec":
+        enc_list = [
+            {"ln1": _norm_init(cfg), "ln2": _norm_init(cfg),
+             "attn": L.attention_init(jax.random.fold_in(ks[3], i), cfg),
+             "mlp": L.mlp_init(jax.random.fold_in(ks[4], i), cfg)}
+            for i in range(cfg.n_enc_layers)]
+        params["enc_blocks"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *enc_list)
+        params["enc_final_ln"] = _norm_init(cfg)
+        params["pos_embed"] = L.embed_init(ks[5], 32768, cfg.d_model,
+                                           cfg.param_dtype)
+        params["enc_pos_embed"] = L.embed_init(ks[6], cfg.enc_seq,
+                                               cfg.d_model, cfg.param_dtype)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# block application (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _apply_slot(lp, x, cfg, mixer, ffn, positions, mode, enc_out):
+    aux = jnp.float32(0)
+    h = _norm(cfg, lp["ln1"], x)
+    if mixer == "attn":
+        if mode == "prefill" or x.shape[1] >= 2048:
+            # online-softmax chunked attention: never materializes the
+            # (S x S) score matrix (flash-attention memory shape)
+            a = L.attn_chunked(lp["attn"], h, cfg, positions,
+                               chunk=cfg.attn_chunk)
+        else:
+            a = L.attn_full(lp["attn"], h, cfg, positions)
+    elif mixer == "mamba":
+        a, _ = MAMBA.mamba_apply(lp["mamba"], h, cfg, mode="train")
+    elif mixer == "rwkv":
+        a, _ = RWKV.timemix_apply(lp["tm"], h, None, cfg, mode="chunked")
+    x = x + a
+    h = _norm(cfg, lp["ln2"], x)
+    if ffn == "mlp":
+        f = L.mlp(lp["mlp"], h, cfg)
+    elif ffn == "moe":
+        f, aux = MOE.moe_apply(lp["moe"], h, cfg)
+    elif ffn == "moe+mlp":
+        f1, aux = MOE.moe_apply(lp["moe"], h, cfg)
+        f = f1 + L.mlp(lp["mlp"], h, cfg)
+    elif ffn == "rwkv_cm":
+        f = RWKV.channelmix_apply(lp["cm"], h, None, cfg)
+    x = x + f
+    if cfg.family == "encdec":
+        hx = _norm(cfg, lp["ln_x"], x)
+        kv = L.encode_kv(lp["xattn"], enc_out, cfg)
+        x = x + L.cross_attention(lp["xattn"], hx, kv, cfg)
+    return x, aux
+
+
+def _embed_inputs(params, batch, cfg):
+    if cfg.embed_stub and "embeds" in batch:
+        x = batch["embeds"].astype(cfg.compute_dtype)
+    else:
+        tok = batch["tokens"]
+        x = jnp.take(params["embed"], tok, axis=0).astype(cfg.compute_dtype)
+    return constrain(x, "data", None, None)
+
+
+def _encode(params, batch, cfg):
+    """Whisper encoder (uniform stack, scanned like the decoder)."""
+    x = batch["enc_embeds"].astype(cfg.compute_dtype)
+    pos = jnp.arange(x.shape[1], dtype=jnp.int32)
+    x = x + jnp.take(params["enc_pos_embed"], pos, axis=0) \
+        .astype(x.dtype)[None]
+    positions = jnp.broadcast_to(pos[None], x.shape[:2])
+
+    def body(x, lp):
+        h = _norm(cfg, lp["ln1"], x)
+        x = x + L.attn_full(lp["attn"], h, cfg, positions, causal=False)
+        h = _norm(cfg, lp["ln2"], x)
+        x = x + L.mlp(lp["mlp"], h, cfg)
+        return x, None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+    return _norm(cfg, params["enc_final_ln"], x)
+
+
+def _backbone(params, x, cfg, positions, mode, enc_out=None):
+    pattern = block_pattern(cfg)
+
+    def body(carry, rep_params):
+        x, aux = carry
+        for si, (mixer, ffn) in enumerate(pattern):
+            x, a = _apply_slot(rep_params[f"slot{si}"], x, cfg, mixer,
+                               ffn, positions, mode, enc_out)
+            aux = aux + a
+        if cfg.seq_parallel:
+            # boundary residual stored sequence-sharded on "model"
+            # (Megatron SP): the scan's saved-for-backward stack is /TP
+            x = constrain(x, "data", "model", None)
+        return (x, aux), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    x0 = constrain(x, "data", "model", None) if cfg.seq_parallel else x
+    (x, aux), _ = jax.lax.scan(fn, (x0, jnp.float32(0)), params["blocks"])
+    return _norm(cfg, params["final_ln"], x), aux
+
+
+def _logits(params, x, cfg):
+    head = (params["embed"].T if cfg.tie_embeddings
+            else params["lm_head"])
+    return x @ head.astype(x.dtype)
+
+
+def _chunked_ce(params, x, labels, cfg):
+    """CE over sequence chunks; padded-vocab tail masked out."""
+    b, s, d = x.shape
+    vp = vocab_padded(cfg)
+    chunk = min(CE_CHUNK, s)
+    n = s // chunk
+    xc = x.reshape(b, n, chunk, d)
+    lc = labels.reshape(b, n, chunk)
+    vmask = (jnp.arange(vp) < cfg.vocab)
+
+    def body(tot, xs):
+        xi, li = xs                             # (B, chunk, D), (B, chunk)
+        lg = _logits(params, xi, cfg).astype(jnp.float32)
+        lg = jnp.where(vmask[None, None], lg, -1e30)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, li[..., None], axis=-1)[..., 0]
+        return tot + jnp.sum(logz - gold), None
+
+    fn = jax.checkpoint(body) if cfg.remat else body
+    tot, _ = jax.lax.scan(fn, jnp.float32(0),
+                          (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    return tot / (b * s)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+def forward_train(params, batch, cfg):
+    """batch: tokens|embeds (B,S[,D]), labels (B,S) [, enc_embeds].
+    Returns (loss, metrics-dict)."""
+    x = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    if cfg.family == "encdec":
+        enc_out = _encode(params, batch, cfg)
+        pos_emb = jnp.take(params["pos_embed"], positions[0], axis=0)
+        x = x + pos_emb.astype(x.dtype)[None]
+    else:
+        enc_out = None
+    x, aux = _backbone(params, x, cfg, positions, "train", enc_out)
+    ce = _chunked_ce(params, x, batch["labels"], cfg)
+    loss = ce + 0.01 * aux
+    return loss, {"ce": ce, "aux": aux}
+
+
+def _slot_cache(cfg, mixer, batch_size, max_seq):
+    hd = cfg.head_dim
+    if mixer == "attn":
+        shape = (batch_size, max_seq, cfg.n_kv_heads, hd)
+        st = {"k": jnp.zeros(shape, jnp.bfloat16),
+              "v": jnp.zeros(shape, jnp.bfloat16)}
+    elif mixer == "mamba":
+        di = cfg.mamba_d_inner or 2 * cfg.d_model
+        st = {"conv": jnp.zeros((batch_size, MAMBA.D_CONV - 1, di),
+                                cfg.compute_dtype),
+              "ssm": jnp.zeros((batch_size, di, MAMBA.D_STATE),
+                               jnp.float32)}
+    else:  # rwkv
+        h = cfg.n_heads
+        st = {"wkv": jnp.zeros((batch_size, h, cfg.d_model // h,
+                                cfg.d_model // h), jnp.float32),
+              "tm_x": jnp.zeros((batch_size, cfg.d_model),
+                                cfg.compute_dtype),
+              "cm_x": jnp.zeros((batch_size, cfg.d_model),
+                                cfg.compute_dtype)}
+    if cfg.family == "encdec":
+        st["ck"] = jnp.zeros((batch_size, cfg.enc_seq, cfg.n_kv_heads, hd),
+                             jnp.bfloat16)
+        st["cv"] = jnp.zeros((batch_size, cfg.enc_seq, cfg.n_kv_heads, hd),
+                             jnp.bfloat16)
+    return st
+
+
+def init_cache(cfg, batch_size: int, max_seq: int) -> dict:
+    """Decode state, stacked over repeats: every leaf has a leading
+    n_repeats axis so decode scans over (params, cache) in lockstep."""
+    pattern = block_pattern(cfg)
+    reps = n_repeats(cfg)
+    one = {f"slot{i}": _slot_cache(cfg, pattern[i][0], batch_size, max_seq)
+           for i in range(len(pattern))}
+    return {"blocks": jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (reps,) + x.shape), one)}
+
+
+def _decode_slot(lp, st, x, cfg, mixer, ffn, pos):
+    new_st = dict(st)
+    h = _norm(cfg, lp["ln1"], x)
+    if mixer == "attn":
+        a, nk, nv = L.attn_decode(lp["attn"], h, cfg, st["k"], st["v"], pos)
+        new_st["k"], new_st["v"] = nk, nv
+    elif mixer == "mamba":
+        a, ms = MAMBA.mamba_apply(lp["mamba"], h, cfg, mode="decode",
+                                  state={"conv": st["conv"],
+                                         "ssm": st["ssm"]})
+        new_st["conv"], new_st["ssm"] = ms["conv"], ms["ssm"]
+    else:  # rwkv
+        a, wkv = RWKV.timemix_apply(lp["tm"], h, st["tm_x"], cfg,
+                                    mode="decode", state=st["wkv"])
+        new_st["wkv"], new_st["tm_x"] = wkv, h[:, 0]
+    x = x + a
+    h = _norm(cfg, lp["ln2"], x)
+    if ffn == "mlp":
+        f = L.mlp(lp["mlp"], h, cfg)
+    elif ffn == "moe":
+        f, _ = MOE.moe_apply(lp["moe"], h, cfg)
+    elif ffn == "moe+mlp":
+        f1, _ = MOE.moe_apply(lp["moe"], h, cfg)
+        f = f1 + L.mlp(lp["mlp"], h, cfg)
+    else:  # rwkv_cm
+        f = RWKV.channelmix_apply(lp["cm"], h, st["cm_x"], cfg)
+        new_st["cm_x"] = h[:, 0]
+    x = x + f
+    if cfg.family == "encdec":
+        hx = _norm(cfg, lp["ln_x"], x)
+        x = x + L.cross_attention(lp["xattn"], hx, (st["ck"], st["cv"]),
+                                  cfg)
+    return x, new_st
+
+
+def forward_decode(params, cache, batch, pos, cfg):
+    """One-token decode step. batch: token (B,) or embed (B,D).
+    pos: int32 scalar (current position). Returns (logits, new cache)."""
+    if cfg.embed_stub and "embed" in batch:
+        x = batch["embed"][:, None].astype(cfg.compute_dtype)
+    else:
+        x = jnp.take(params["embed"], batch["token"][:, None],
+                     axis=0).astype(cfg.compute_dtype)
+    if cfg.family == "encdec":
+        pe = jnp.take(params["pos_embed"], jnp.full((1,), pos, jnp.int32),
+                      axis=0)
+        x = x + pe.astype(x.dtype)[None]
+    pattern = block_pattern(cfg)
+
+    def body(x, xs):
+        rep_params, rep_cache = xs
+        new_cache = {}
+        for si, (mixer, ffn) in enumerate(pattern):
+            x, new_cache[f"slot{si}"] = _decode_slot(
+                rep_params[f"slot{si}"], rep_cache[f"slot{si}"], x, cfg,
+                mixer, ffn, pos)
+        return x, new_cache
+
+    x, new_blocks = jax.lax.scan(body, x, (params["blocks"],
+                                           cache["blocks"]))
+    x = _norm(cfg, params["final_ln"], x)
+    logits = _logits(params, x, cfg)[:, 0]
+    return logits, {"blocks": new_blocks}
+
+
+def forward_prefill(params, batch, cfg):
+    """Full-sequence prefill returning last-token logits (the serving
+    engine additionally captures KV into the decode cache; this
+    function's compute/memory profile is the prefill_32k dry-run cell)."""
+    x = _embed_inputs(params, batch, cfg)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None],
+                                 (b, s))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, batch, cfg)
+        pos_emb = jnp.take(params["pos_embed"], positions[0], axis=0)
+        x = x + pos_emb.astype(x.dtype)[None]
+    x, _aux = _backbone(params, x, cfg, positions, "prefill", enc_out)
+    logits = _logits(params, x[:, -1:], cfg)[:, 0]
+    return logits

@@ -1,0 +1,98 @@
+"""AdamW with configurable state dtype and ZeRO-1 sharding.
+
+Functional, optax-free.  The optimizer state (m, v) can be kept in
+bf16 to halve optimizer memory (used for the 340B+ dry-run cells), and
+is sharded across the *data* axis on top of the parameter sharding
+(ZeRO-1): ``zero1_spec`` extends a parameter PartitionSpec by placing
+the first still-unsharded, divisible dimension on "data".
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    state_dtype: str = "float32"     # "bfloat16" halves optimizer memory
+    warmup_steps: int = 100
+
+
+def init_state(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.state_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)  # noqa: E731
+    return {"m": jax.tree.map(zeros, params),
+            "v": jax.tree.map(zeros, params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(step.astype(jnp.float32) / max(cfg.warmup_steps, 1),
+                       1.0)
+    return cfg.lr * warm
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state).  Global-norm clip + AdamW."""
+    step = state["step"] + 1
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)) + 1e-12)
+    scale = jnp.minimum(1.0, cfg.grad_clip / gnorm)
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+    sdt = jnp.dtype(cfg.state_dtype)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g * g
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) \
+            + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * delta
+        return newp.astype(p.dtype), m32.astype(sdt), v32.astype(sdt)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v
+           in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_p, {"m": new_m, "v": new_v, "step": step}
+
+
+def zero1_spec(param_spec: P, shape, mesh) -> P:
+    """ZeRO-1: shard optimizer state over "data" on the first dimension
+    that is unsharded and divisible by the data-axis size."""
+    if mesh is None or "data" not in mesh.axis_names:
+        return param_spec
+    entries = list(param_spec) + [None] * (len(shape) - len(param_spec))
+
+    def uses_data(e):
+        return e == "data" or (isinstance(e, tuple) and "data" in e)
+
+    if any(uses_data(e) for e in entries):
+        return param_spec                    # FSDP already shards on data
+    dsize = mesh.shape["data"]
+    for i, (e, n) in enumerate(zip(entries, shape)):
+        if e is None and n % dsize == 0 and n >= dsize:
+            entries[i] = "data"
+            break
+    return P(*entries)

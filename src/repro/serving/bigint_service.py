@@ -1,0 +1,66 @@
+"""Batched multi-precision division service -- the serving driver for
+the paper's workload (many independent divisions at one precision).
+
+Requests are Python ints; the service packs them into fixed-width limb
+batches, pads the batch to the compiled batch size, runs the jitted
+vmapped divmod (sharded across all available devices when a mesh is
+given), and unpacks exact results.  One compiled executable per
+(m_limbs, batch_bucket).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import bigint as bi
+from repro.core import shinv as S
+
+
+class BigintDivisionService:
+    def __init__(self, m_limbs: int, mesh=None, impl: str | None = None,
+                 batch_buckets=(64, 256, 1024)):
+        self.m = m_limbs
+        self.mesh = mesh
+        self.impl = impl
+        self.buckets = sorted(batch_buckets)
+        self._fns: dict[int, object] = {}
+
+    def _fn(self, bucket: int):
+        if bucket not in self._fns:
+            f = partial(S.divmod_batch, impl=self.impl)
+            if self.mesh is not None:
+                axes = tuple(self.mesh.axis_names)
+                sh = NamedSharding(self.mesh, P(axes, None))
+                f = jax.jit(f, in_shardings=(sh, sh),
+                            out_shardings=(sh, sh))
+            else:
+                f = jax.jit(f)
+            self._fns[bucket] = f
+        return self._fns[bucket]
+
+    def divide(self, us: list[int], vs: list[int]):
+        """Exact (q, r) lists for batched u/v (v > 0)."""
+        n = len(us)
+        assert n == len(vs) and n > 0
+        bucket = next((b for b in self.buckets if b >= n),
+                      self.buckets[-1])
+        if n > bucket:      # split oversized requests
+            qs, rs = [], []
+            for i in range(0, n, bucket):
+                q, r = self.divide(us[i:i + bucket], vs[i:i + bucket])
+                qs += q
+                rs += r
+            return qs, rs
+        u_pad = us + [0] * (bucket - n)
+        v_pad = vs + [1] * (bucket - n)
+        ua = jnp.asarray(bi.batch_from_ints(u_pad, self.m))
+        va = jnp.asarray(bi.batch_from_ints(v_pad, self.m))
+        q, r = self._fn(bucket)(ua, va)
+        return (bi.batch_to_ints(np.asarray(q)[:n]),
+                bi.batch_to_ints(np.asarray(r)[:n]))

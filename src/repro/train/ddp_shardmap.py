@@ -1,0 +1,90 @@
+"""Explicit-collective DDP trainer with error-feedback int8 gradient
+compression (shard_map over the "data" axis).
+
+This demonstrates the distributed-optimization layer with collectives
+under our control rather than GSPMD's:
+
+  * per-device loss/grad on the local microbatch,
+  * gradient all-reduce replaced by QUANTIZE -> reduce -> DEQUANTIZE:
+      - global scale s = psum_max(|g + e|) / 127   (tiny collective)
+      - q = round((g + e)/s) int8, clipped
+      - psum(q as int32) -- on a real interconnect this rides as int8
+        payload chunks: 4x wire-bytes reduction vs f32 ring all-reduce
+      - error feedback  e' = (g + e) - q*s  (keeps the quantizer
+        unbiased over time; Seide et al. / EF-SGD)
+  * uncompressed psum fallback (compress=False) for A/B testing.
+
+Numerics are validated in tests: EF-compressed training tracks the
+uncompressed loss curve on a small model.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def _quantized_psum(g, err, axis: str):
+    """Error-feedback int8 all-reduce of one tensor. Returns (mean_g,
+    new_err)."""
+    c = g.astype(jnp.float32) + err
+    amax = jnp.max(jnp.abs(c))
+    amax = jax.lax.pmax(amax, axis)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)     # int8 payload
+    n = jax.lax.psum(jnp.ones((), jnp.float32), axis)
+    mean = total.astype(jnp.float32) * scale / n
+    new_err = c - q.astype(jnp.float32) * scale
+    return mean, new_err
+
+
+def make_ddp_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh: Mesh,
+                        compress: bool = True):
+    """train_step(params, opt, err, batch) -> (params, opt, err, loss).
+
+    params/opt replicated; batch sharded on "data"; err (error-feedback
+    buffers, f32 zeros like params) sharded like params (replicated).
+    """
+    def loss_fn(p, b):
+        loss, _ = T.forward_train(p, b, cfg)
+        return loss
+
+    def local_step(params, opt, err, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        loss = jax.lax.pmean(loss, "data")
+        if compress:
+            flat_g, tdef = jax.tree.flatten(grads)
+            flat_e = jax.tree.leaves(err)
+            out = [_quantized_psum(g, e, "data")
+                   for g, e in zip(flat_g, flat_e)]
+            grads = jax.tree.unflatten(tdef, [o[0] for o in out])
+            err = jax.tree.unflatten(tdef, [o[1] for o in out])
+        else:
+            grads = jax.tree.map(
+                lambda g: jax.lax.pmean(g.astype(jnp.float32), "data"),
+                grads)
+        new_p, new_opt = adamw.apply_updates(params, grads, opt, opt_cfg)
+        return new_p, new_opt, err, loss
+
+    rep = P()
+    shard_b = P("data")
+    fn = jax.shard_map(
+        local_step, mesh=mesh,
+        in_specs=(rep, rep, rep,
+                  jax.tree.map(lambda _: shard_b, {"tokens": 0,
+                                                   "labels": 0})),
+        out_specs=(rep, rep, rep, rep),
+        check_vma=False)
+    return jax.jit(fn)
+
+
+def init_error_buffers(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)

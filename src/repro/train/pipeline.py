@@ -1,0 +1,119 @@
+"""Pipeline parallelism over the "pod" mesh axis (GPipe schedule).
+
+Multi-pod reality: inter-pod links are far slower than in-pod ICI, so
+instead of pure DP across pods (the dry-run default), the pod axis can
+carry *pipeline stages*: pod s owns the layer-repeat slice
+blocks[s*R/P : (s+1)*R/P] (the stacked layer axis is simply sharded on
+"pod"), and microbatches stream stage-to-stage with
+`jax.lax.ppermute` -- one boundary activation per microbatch per step
+crosses the pod boundary instead of every gradient.
+
+Implementation: `shard_map` over "pod".  The canonical GPipe loop runs
+n_micro + P - 1 ticks; each tick every stage (a) runs its slice on its
+current microbatch if one is resident, (b) passes its output ring-wise
+to the next stage.  Bubble fraction = (P-1)/(n_micro+P-1).
+
+Forward parity with the non-pipelined model is tested on a host mesh
+(tests/test_pipeline.py); the same schedule lowers for the production
+(2,16,16) mesh.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models import transformer as T
+from repro.models.sharding import use_mesh
+
+
+def _stage_apply(blocks_slice, x, cfg, positions):
+    """Run one stage's layer repeats (a mini _backbone, no final norm)."""
+    pattern = T.block_pattern(cfg)
+
+    def body(carry, rep_params):
+        h = carry
+        for si, (mixer, ffn) in enumerate(pattern):
+            h, _ = T._apply_slot(rep_params[f"slot{si}"], h, cfg, mixer,
+                                 ffn, positions, "train", None)
+        return h, None
+
+    x, _ = jax.lax.scan(body, x, blocks_slice)
+    return x
+
+
+def make_pipelined_forward(cfg, mesh: Mesh, n_micro: int):
+    """forward(params, embeds (B,S,D)) -> hidden states (B,S,D), with
+    params["blocks"] sharded P("pod") on the repeat axis.
+
+    Requires batch % n_micro == 0 and n_repeats % pod == 0.
+    """
+    n_pods = mesh.shape["pod"]
+    reps = T.n_repeats(cfg)
+    assert reps % n_pods == 0, (reps, n_pods)
+
+    def fn(blocks, x):
+        # inside shard_map: blocks is the local (reps/P, ...) slice,
+        # x is the full (replicated-on-pod) activation stream
+        stage = jax.lax.axis_index("pod")
+        b, s, d = x.shape
+        mb = b // n_micro
+        positions = jnp.broadcast_to(
+            jnp.arange(s, dtype=jnp.int32)[None], (mb, s))
+        stream = x.reshape(n_micro, mb, s, d)
+        buf = jnp.zeros((mb, s, d), x.dtype)       # resident microbatch
+        out = jnp.zeros_like(stream)
+        ticks = n_micro + n_pods - 1
+        for t in range(ticks):
+            # stage 0 ingests microbatch t (if any)
+            incoming = stream[min(t, n_micro - 1)]
+            buf = jnp.where((stage == 0) & (t < n_micro), incoming, buf)
+            # every stage processes its resident microbatch
+            m = t - stage                           # microbatch id here
+            active = (m >= 0) & (m < n_micro)
+            processed = _stage_apply(blocks, buf, cfg, positions)
+            buf = jnp.where(active, processed, buf)
+            # last stage emits; others hand off ring-wise
+            done_id = t - (n_pods - 1)
+            emit = (stage == n_pods - 1) & (done_id >= 0) \
+                & (done_id < n_micro)
+            out = jnp.where(
+                emit,
+                out.at[jnp.clip(done_id, 0, n_micro - 1)].set(buf),
+                out)
+            buf = jax.lax.ppermute(
+                buf, "pod", [(i, (i + 1) % n_pods) for i in range(n_pods)])
+        # the final hidden states live on the last stage's `out`; share
+        out = jax.lax.psum(
+            jnp.where(stage == n_pods - 1, out, jnp.zeros_like(out)),
+            "pod")
+        return out.reshape(b, s, d)
+
+    pod_blocks = P("pod")      # prefix spec: applies to every leaf
+    mapped = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(pod_blocks, P()),
+        out_specs=P(),
+        check_vma=False)
+
+    def forward(params, embeds):
+        return mapped(params["blocks"], embeds)
+
+    return forward
+
+
+def pipelined_loss(cfg, mesh: Mesh, n_micro: int):
+    """CE loss using the pipelined backbone (embeds/labels replicated
+    on the pod axis; data/model axes free for DP/TP inside stages)."""
+    fwd = make_pipelined_forward(cfg, mesh, n_micro)
+
+    def loss_fn(params, batch):
+        x = T._embed_inputs(params, batch, cfg)
+        h = fwd(params, x)
+        h = T._norm(cfg, params["final_ln"], h)
+        return T._chunked_ce(params, h, batch["labels"], cfg)
+
+    return loss_fn

@@ -1,0 +1,101 @@
+"""Jit-able train_step / serve_step builders.
+
+train_step supports gradient accumulation over microbatches (a
+lax.scan), which is both the activation-memory lever for the 340B-class
+dry-run cells and the natural place where DP gradient communication
+overlaps with microbatch compute (XLA schedules the accumulated psum of
+microbatch k against the compute of k+1).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as T
+from repro.optim import adamw
+
+
+def make_loss_fn(cfg):
+    def loss_fn(params, batch):
+        loss, metrics = T.forward_train(params, batch, cfg)
+        return loss, metrics
+    return loss_fn
+
+
+def make_train_step(cfg, opt_cfg: adamw.AdamWConfig,
+                    microbatches: int = 1, param_shardings=None,
+                    grad_accum_dtype=jnp.float32):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).
+
+    param_shardings (optional pytree of NamedSharding) pins the
+    gradient accumulator of the microbatch scan to the parameter
+    layout -- without it XLA may leave the carry replicated on the
+    data axis (measured: 56 GiB vs 5 GiB per device at 340B).
+
+    grad_accum_dtype=bfloat16 halves accumulator memory and the
+    gradient reduction wire bytes (loss-scale-free; acceptable with
+    few microbatches, measured against f32 in tests).
+    """
+    loss_fn = make_loss_fn(cfg)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def pin(tree):
+        if param_shardings is None:
+            return tree
+        return jax.tree.map(
+            lambda x, s: jax.lax.with_sharding_constraint(x, s),
+            tree, param_shardings)
+
+    def split_mb(batch):
+        def r(x):
+            b = x.shape[0]
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        return jax.tree.map(r, batch)
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            mbs = split_mb(batch)
+            g0 = pin(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, grad_accum_dtype), params))
+
+            def body(carry, mb):
+                acc, ltot = carry
+                (l, _m), g = grad_fn(params, mb)
+                acc = pin(jax.tree.map(
+                    lambda a, gi: a + gi.astype(grad_accum_dtype),
+                    acc, g))
+                return (acc, ltot + l), None
+
+            (grads, ltot), _ = jax.lax.scan(body, (g0, jnp.float32(0)), mbs)
+            grads = jax.tree.map(
+                lambda g: g.astype(jnp.float32) / microbatches, grads)
+            loss = ltot / microbatches
+            metrics = {"ce": loss, "aux": jnp.float32(0)}
+        new_params, new_opt = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_step(cfg):
+    """serve_step(params, cache, batch, pos) -> (logits, new_cache)."""
+    def serve_step(params, cache, batch, pos):
+        return T.forward_decode(params, cache, batch, pos, cfg)
+    return serve_step
+
+
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        return T.forward_prefill(params, batch, cfg)
+    return prefill_step

@@ -1,0 +1,132 @@
+"""Fault-tolerant training loop.
+
+Production behaviours implemented (and unit-tested with fault
+injection):
+
+  * checkpoint/restart -- async checkpoints every `ckpt_every` steps;
+    on any step failure the loop restores the latest complete
+    checkpoint and continues; data skip-ahead is free because the
+    synthetic pipeline is counter-based (step -> batch is a pure
+    function).
+  * elastic restore -- checkpoints restore onto a different device
+    count/mesh (shardings are recomputed for the new mesh).
+  * straggler watchdog -- per-step wall time is tracked with an EMA;
+    a step slower than `straggler_factor` x EMA fires a callback (in a
+    real deployment: re-slice the mesh / evict the host; here: logged
+    and counted, hook injectable for tests).
+  * failure injection -- `fault_hook(step)` raising simulates a node
+    loss at that step.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt as CK
+from repro.data.synthetic import SyntheticStream, DataConfig
+from repro.models import transformer as T
+from repro.optim import adamw
+from .step import make_train_step
+
+
+@dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    microbatches: int = 1
+    log_every: int = 10
+    straggler_factor: float = 3.0
+    max_restarts: int = 3
+
+
+@dataclass
+class TrainerState:
+    restarts: int = 0
+    straggler_events: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+
+
+class Trainer:
+    def __init__(self, cfg, opt_cfg: adamw.AdamWConfig,
+                 tcfg: TrainerConfig, data_cfg: DataConfig,
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 straggler_hook: Optional[Callable[[int, float], None]]
+                 = None):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.tcfg = tcfg
+        self.stream = SyntheticStream(data_cfg)
+        self.fault_hook = fault_hook
+        self.straggler_hook = straggler_hook
+        self.checkpointer = CK.AsyncCheckpointer(tcfg.ckpt_dir)
+        self.step_fn = jax.jit(make_train_step(
+            cfg, opt_cfg, microbatches=tcfg.microbatches))
+        self.state = TrainerState()
+
+    # -- init or restore ---------------------------------------------------
+    def _fresh(self):
+        params = T.init_params(self.cfg, jax.random.PRNGKey(0))
+        opt = adamw.init_state(params, self.opt_cfg)
+        return params, opt, 0
+
+    def _restore(self):
+        latest = CK.latest_step(self.tcfg.ckpt_dir)
+        if latest is None:
+            return self._fresh()
+        tree, extra = CK.restore(self.tcfg.ckpt_dir)
+        return tree["params"], tree["opt"], int(extra["next_step"])
+
+    # -- main loop ---------------------------------------------------------
+    def run(self) -> TrainerState:
+        params, opt, start = self._restore()
+        step = start
+        ema = None
+        measured = 0          # first steps include compile: not in EMA
+        while step < self.tcfg.steps:
+            try:
+                t0 = time.time()
+                if self.fault_hook:
+                    self.fault_hook(step)
+                batch = {k: jax.numpy.asarray(v)
+                         for k, v in self.stream.batch(step).items()}
+                params, opt, metrics = self.step_fn(params, opt, batch)
+                loss = float(metrics["loss"])
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at {step}")
+                dt = time.time() - t0
+                # straggler watchdog (EMA excludes the compile steps)
+                if ema is not None and dt > self.tcfg.straggler_factor * ema:
+                    self.state.straggler_events.append((step, dt, ema))
+                    if self.straggler_hook:
+                        self.straggler_hook(step, dt)
+                measured += 1
+                if measured > 2:
+                    ema = dt if ema is None else 0.9 * ema + 0.1 * dt
+                self.state.losses.append(loss)
+                if step % self.tcfg.log_every == 0:
+                    print(f"step {step:5d} loss {loss:.4f} "
+                          f"({dt*1e3:.0f} ms)", flush=True)
+                step += 1
+                if step % self.tcfg.ckpt_every == 0:
+                    self.checkpointer.save_async(
+                        step, {"params": params, "opt": opt},
+                        {"next_step": step})
+            except (FloatingPointError, RuntimeError, ValueError) as e:
+                self.state.restarts += 1
+                print(f"[trainer] step {step} failed ({e}); "
+                      f"restart {self.state.restarts}", flush=True)
+                if self.state.restarts > self.tcfg.max_restarts:
+                    raise
+                self.checkpointer.wait()
+                params, opt, step = self._restore()
+        self.checkpointer.wait()
+        self.checkpointer.save_async(step, {"params": params, "opt": opt},
+                                     {"next_step": step})
+        self.checkpointer.wait()
+        return self.state

@@ -1,0 +1,148 @@
+"""Core whole-shifted-inverse division: oracle + JAX implementation."""
+
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bigint as bi, pyref as R, shinv as S
+
+B = bi.BASE
+
+
+# ---------------------------------------------------------------------------
+# pyref oracle vs Python ints
+# ---------------------------------------------------------------------------
+
+def test_paper_examples():
+    q, r = R.divmod_shinv(314159265358979, 27183, 10)
+    assert (q, r) == divmod(314159265358979, 27183)
+    assert q == 11557196238
+    q, r = R.divmod_shinv(726319138718412, 27183, 10)
+    assert q == 26719609267            # the delta=+1 case from Example 2
+
+
+def test_pyref_shinv_exhaustive_small():
+    for v in range(1, 4096, 3):
+        for h in (1, 2, 3, 5):
+            w = R.shinv(v, h, 16)
+            exact = 16 ** h // v
+            assert w in (exact, exact + 1), (v, h)
+
+
+@given(st.integers(0, 2 ** 512), st.integers(1, 2 ** 256))
+@settings(max_examples=200, deadline=None)
+def test_pyref_div_property(u, v):
+    assert R.divmod_shinv(u, v, B) == divmod(u, v)
+
+
+@given(st.integers(1, 2 ** 300), st.integers(1, 60))
+@settings(max_examples=150, deadline=None)
+def test_pyref_shinv_theorem2(v, h):
+    """shinv_h(v) in {floor(B^h/v), floor(B^h/v) + 1} (Theorem 2)."""
+    w = R.shinv(v, h, B)
+    exact = B ** h // v
+    assert w in (exact, exact + 1)
+
+
+def test_pyref_small_bases():
+    rnd = random.Random(7)
+    for base in (2, 3, 4, 10):
+        for _ in range(100):
+            v = rnd.randint(1, base ** 12)
+            h = rnd.randint(1, 16)
+            w = R.shinv(v, h, base)
+            exact = base ** h // v
+            assert w in (exact, exact + 1), (base, v, h)
+
+
+def test_cost_model_bounds():
+    """Sec 2.3: division needs >= 5 full multiplications; the fixed
+    trip-count Refine (paper Algorithm 1 line 19) occasionally runs one
+    settling iteration extra, so allow a small tail above 7."""
+    rnd = random.Random(11)
+    M = 256
+    counts = []
+    for _ in range(50):
+        u = rnd.randint(B ** (M - 3), B ** (M - 2) - 1)
+        kv = rnd.randint(2, M // 2)
+        v = rnd.randint(B ** (kv - 1), B ** kv - 1)
+        c = R.CostCounter()
+        assert R.divmod_shinv(u, v, B, c) == divmod(u, v)
+        n = c.n_full_mults(M)
+        n += sum(1 for rec in c.records
+                 if rec.where == "div-u*shinv" and rec.prec_out > M)
+        counts.append(n)
+    assert min(counts) >= 5
+    assert sorted(counts)[len(counts) // 2] <= 7      # median within bound
+    assert max(counts) <= 9
+
+
+# ---------------------------------------------------------------------------
+# JAX implementation vs oracle
+# ---------------------------------------------------------------------------
+
+def _check_batch(us, vs, m):
+    q, r = S.divmod_batch(jnp.asarray(bi.batch_from_ints(us, m)),
+                          jnp.asarray(bi.batch_from_ints(vs, m)))
+    for u, v, qq, rr in zip(us, vs, bi.batch_to_ints(q), bi.batch_to_ints(r)):
+        assert (qq, rr) == divmod(u, v), (u, v)
+
+
+def test_jax_div_edges():
+    us, vs = [], []
+    for u in [0, 1, 2, B - 1, B, B + 1, B * B, B * B - 1, B ** 3]:
+        for v in [1, 2, 3, B - 1, B, B + 1, B * B - 1, B * B]:
+            us.append(u), vs.append(v)
+    _check_batch(us, vs, 4)
+
+
+@pytest.mark.parametrize("m", [4, 8, 32])
+def test_jax_div_random(m):
+    rnd = random.Random(m)
+    us = [rnd.randint(0, B ** rnd.randint(1, m) - 1) for _ in range(48)]
+    vs = [rnd.randint(1, B ** rnd.randint(1, m) - 1) for _ in range(48)]
+    _check_batch(us, vs, m)
+
+
+def test_jax_div_bench_config():
+    """The paper's evaluation configuration: prec(u) = M-2, prec(v)
+    random in [2, M/2] -- maximal refinement iterations."""
+    rnd = random.Random(42)
+    m = 64
+    us = [rnd.randint(B ** (m - 3), B ** (m - 2) - 1) for _ in range(24)]
+    vs = []
+    for _ in range(24):
+        kv = rnd.randint(2, m // 2)
+        vs.append(rnd.randint(B ** (kv - 1), B ** kv - 1))
+    _check_batch(us, vs, m)
+
+
+@given(st.data())
+@settings(max_examples=40, deadline=None)
+def test_jax_div_property(data):
+    m = data.draw(st.sampled_from([4, 8, 16]))
+    u = data.draw(st.integers(0, B ** m - 1))
+    v = data.draw(st.integers(1, B ** m - 1))
+    _check_batch([u], [v], m)
+
+
+def test_jax_shinv_matches_pyref():
+    rnd = random.Random(5)
+    m = 16
+    width = m + 8
+    import math
+    from repro.core.shinv import shinv_batch
+    vs, hs = [], []
+    for _ in range(32):
+        kv = rnd.randint(1, m)
+        vs.append(rnd.randint(1, B ** kv - 1))
+        hs.append(rnd.randint(1, m))
+    w = shinv_batch(jnp.asarray(bi.batch_from_ints(vs, width)),
+                    jnp.asarray(np.array(hs, np.int32)),
+                    iters_max=math.ceil(math.log2(m)) + 2)
+    for v, h, wi in zip(vs, hs, bi.batch_to_ints(w)):
+        exact = B ** h // v
+        assert wi in (exact, exact + 1), (v, h, wi, exact)

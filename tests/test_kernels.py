@@ -1,0 +1,168 @@
+"""Pallas kernel + blocked einsum vs the digit-scan oracle (ref.py)."""
+
+import random
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import bigint as bi
+from repro.core import arith as A
+from repro.kernels import ops, bigmul, ref
+
+B = bi.BASE
+
+
+def _as_limbs(x, w):
+    return jnp.asarray(bi.from_int(x, w))
+
+
+# ---------------------------------------------------------------------------
+# arith primitives
+# ---------------------------------------------------------------------------
+
+@given(st.integers(0, B ** 12 - 1), st.integers(0, B ** 12 - 1))
+@settings(max_examples=150, deadline=None)
+def test_add_sub_property(a, b):
+    w = 14
+    ua, ub = _as_limbs(a, w), _as_limbs(b, w)
+    assert bi.to_int(jax.jit(A.add)(ua, ub)) == a + b
+    lo, hi = min(a, b), max(a, b)
+    assert bi.to_int(jax.jit(A.sub)(_as_limbs(hi, w), _as_limbs(lo, w))) \
+        == hi - lo
+    assert bool(jax.jit(A.lt)(ua, ub)) == (a < b)
+
+
+@given(st.integers(0, B ** 10 - 1), st.integers(-12, 12))
+@settings(max_examples=100, deadline=None)
+def test_shift_property(a, n):
+    w = 12
+    got = bi.to_int(jax.jit(A.shift)(_as_limbs(a, w), n))
+    want = (a * B ** n if n >= 0 else a // B ** (-n)) % B ** w
+    assert got == want
+
+
+@given(st.integers(1, B ** 10 - 1), st.integers(0, 9))
+@settings(max_examples=100, deadline=None)
+def test_sub_pow_property(a, p):
+    w = 12
+    if a < B ** p:
+        return
+    assert bi.to_int(jax.jit(A.sub_pow)(_as_limbs(a, w), p)) == a - B ** p
+
+
+def test_prec_and_pow_predicates():
+    w = 8
+    for x, p in [(0, 0), (1, 1), (B - 1, 1), (B, 2), (B ** 3, 4),
+                 (B ** 4 - 1, 4)]:
+        assert int(A.prec(_as_limbs(x, w))) == p
+    assert bool(A.eq_pow(_as_limbs(B ** 2, w), 2))
+    assert not bool(A.eq_pow(_as_limbs(B ** 2 + 1, w), 2))
+    assert bool(A.is_pow(_as_limbs(B ** 5, w)))
+    assert not bool(A.is_pow(_as_limbs(3 * B ** 5, w)))
+
+
+def test_resolve_carries_adversarial():
+    # all-0xFFFF ripple: worst case for carry propagation
+    w = 32
+    raw = jnp.full((w,), 0xFFFF, jnp.uint32).at[0].set(0x1FFFE)
+    got = bi.to_int(jax.jit(A.resolve_carries)(raw))
+    want = sum(0xFFFF * B ** i for i in range(w)) + 0xFFFF
+    assert got == want % B ** w
+
+
+# ---------------------------------------------------------------------------
+# multiplication: all impls vs exact ints, shape/dtype sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["scan", "blocked", "pallas"])
+@pytest.mark.parametrize("wu,wv", [(2, 2), (7, 3), (16, 16), (40, 24),
+                                   (129, 65), (256, 256)])
+def test_mul_impls(impl, wu, wv):
+    rnd = random.Random(wu * 1000 + wv)
+    for _ in range(3):
+        a = rnd.randint(0, B ** wu - 1)
+        b = rnd.randint(0, B ** wv - 1)
+        wo = wu + wv + 1
+        got = bi.to_int(ops.mul_jit(_as_limbs(a, wu), _as_limbs(b, wv),
+                                    wo, impl))
+        assert got == a * b, (impl, wu, wv)
+
+
+@pytest.mark.parametrize("impl", ["scan", "blocked", "pallas"])
+def test_mul_truncation(impl):
+    a = B ** 30 - 12345
+    b = B ** 25 - 6789
+    wo = 40                      # truncating: result mod B^40
+    got = bi.to_int(ops.mul_jit(_as_limbs(a, 30), _as_limbs(b, 25),
+                                wo, impl))
+    assert got == (a * b) % B ** wo
+
+
+@given(st.integers(0, B ** 20 - 1), st.integers(0, B ** 20 - 1))
+@settings(max_examples=60, deadline=None)
+def test_mul_blocked_vs_scan_property(a, b):
+    ua, ub = _as_limbs(a, 20), _as_limbs(b, 20)
+    r1 = ops.mul_jit(ua, ub, 41, "scan")
+    r2 = ops.mul_jit(ua, ub, 41, "blocked")
+    np.testing.assert_array_equal(np.asarray(r1), np.asarray(r2))
+
+
+def test_mul_extremes():
+    for impl in ("scan", "blocked", "pallas"):
+        w = 64
+        a = B ** w - 1
+        got = bi.to_int(ops.mul_jit(_as_limbs(a, w), _as_limbs(a, w),
+                                    2 * w, impl))
+        assert got == a * a, impl
+        z = bi.to_int(ops.mul_jit(_as_limbs(0, w), _as_limbs(a, w),
+                                  2 * w, impl))
+        assert z == 0, impl
+
+
+def test_mulmod_close_product():
+    rnd = random.Random(9)
+    for _ in range(8):
+        wu, wv = 48, 32
+        L = rnd.randint(1, wu)
+        a = rnd.randint(0, B ** wu - 1)
+        b = rnd.randint(0, B ** wv - 1)
+        got = bi.to_int(bigmul.mulmod_pallas(_as_limbs(a, wu),
+                                             _as_limbs(b, wv), L, wu + 2))
+        assert got == (a * b) % B ** L
+
+
+def test_mulmod_work_saving():
+    """The close product schedules strictly fewer block pairs."""
+    wu = 128
+    full_pairs = len(bigmul._pair_schedule(wu * 2 // 128, wu * 2 // 128)[0])
+    t = bigmul.BLOCK_T
+    l_max = 8
+    d_keep = -(-2 * l_max // t)
+    assert d_keep * t < 2 * wu   # the clipped product touches fewer diagonals
+
+
+def test_pallas_vmap_batch():
+    rnd = random.Random(3)
+    xs = [rnd.randint(0, B ** 20 - 1) for _ in range(4)]
+    ys = [rnd.randint(0, B ** 18 - 1) for _ in range(4)]
+    f = jax.vmap(lambda u, v: bigmul.mul_pallas(u, v, 40))
+    r = f(jnp.asarray(bi.batch_from_ints(xs, 20)),
+          jnp.asarray(bi.batch_from_ints(ys, 18)))
+    for x, y, row in zip(xs, ys, np.asarray(r)):
+        assert bi.to_int(row) == x * y
+
+
+def test_divmod_with_pallas_mul():
+    from repro.core import shinv as S
+    rnd = random.Random(13)
+    m = 16
+    us = [rnd.randint(0, B ** m - 1) for _ in range(4)]
+    vs = [rnd.randint(1, B ** (m // 2) - 1) for _ in range(4)]
+    q, r = S.divmod_batch(jnp.asarray(bi.batch_from_ints(us, m)),
+                          jnp.asarray(bi.batch_from_ints(vs, m)),
+                          impl="pallas")
+    for u, v, qq, rr in zip(us, vs, bi.batch_to_ints(q), bi.batch_to_ints(r)):
+        assert (qq, rr) == divmod(u, v)

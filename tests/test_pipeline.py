@@ -1,0 +1,62 @@
+"""Pipeline-over-pod (GPipe) parity: pipelined forward == sequential.
+
+Runs in a subprocess so the 4 virtual host devices do not leak into
+the other tests (jax locks the device count at first init).
+"""
+
+import os
+import subprocess
+import sys
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+import jax, jax.numpy as jnp
+from dataclasses import replace
+from repro import configs
+from repro.models import transformer as T
+from repro.train.pipeline import make_pipelined_forward
+
+cfg = replace(configs.get_config("smollm-135m").reduced(),
+              n_layers=4, remat=False)
+mesh = jax.make_mesh((4, 1, 1), ("pod", "data", "model"),
+                     devices=jax.devices()[:4])
+params = T.init_params(cfg, jax.random.PRNGKey(0))
+B, S = 4, 32
+tok = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, cfg.vocab)
+x = jnp.take(params["embed"], tok, axis=0).astype(cfg.compute_dtype)
+
+# sequential reference
+pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+ref, _ = T._backbone(params, x, cfg, pos, "train")
+# _backbone applies final norm; compare pre-norm by re-deriving:
+pattern = T.block_pattern(cfg)
+h = x
+def body(carry, rep):
+    hh = carry
+    for si, (mixer, ffn) in enumerate(pattern):
+        hh, _ = T._apply_slot(rep[f"slot{si}"], hh, cfg, mixer, ffn,
+                              pos, "train", None)
+    return hh, None
+h, _ = jax.lax.scan(body, h, params["blocks"])
+
+with mesh:
+    fwd = make_pipelined_forward(cfg, mesh, n_micro=2)
+    out = jax.jit(fwd)(params, x)
+
+np.testing.assert_allclose(np.asarray(out, np.float32),
+                           np.asarray(h, np.float32),
+                           rtol=2e-2, atol=2e-2)
+print("PIPELINE_PARITY_OK")
+"""
+
+
+def test_pipeline_forward_parity():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    r = subprocess.run([sys.executable, "-c", SCRIPT], env=env,
+                       capture_output=True, text=True, timeout=600)
+    assert "PIPELINE_PARITY_OK" in r.stdout, (r.stdout[-2000:],
+                                              r.stderr[-2000:])
