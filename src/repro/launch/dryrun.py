@@ -173,6 +173,8 @@ def lower_cell(arch: str, shape_name: str, multi_pod: bool,
             - ma.alias_size_in_bytes,
         }
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):   # jax <= 0.4.x: dict per program
+            ca = ca[0] if ca else {}
         record["xla_cost"] = {k: ca[k] for k in
                               ("flops", "bytes accessed") if k in ca}
         t2 = time.time()

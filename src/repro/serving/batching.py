@@ -1,0 +1,80 @@
+"""Request-batching machinery shared by the serving frontends.
+
+Both `BigintDivisionService` (division) and `ModArithService` (Barrett
+modular arithmetic) follow the same pattern: requests arrive as Python
+int lists of arbitrary length, get padded to one of a fixed set of
+compiled batch-bucket sizes (one executable per bucket), optionally
+sharded across a device mesh on the batch axis, and the results are
+trimmed back to the true request size.  This module owns that pattern.
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class Batcher:
+    """Plans how a request of size n maps onto compiled bucket sizes.
+
+    Oversized requests are split into largest-bucket chunks; the final
+    partial chunk gets the smallest bucket that fits it.
+    """
+
+    def __init__(self, buckets=(64, 256, 1024)):
+        if not buckets:
+            raise ValueError("need at least one batch bucket")
+        self.buckets = tuple(sorted(buckets))
+
+    def bucket_for(self, n: int) -> int:
+        return next((b for b in self.buckets if b >= n), self.buckets[-1])
+
+    def plan(self, n: int) -> list[tuple[int, int, int]]:
+        """[(lo, hi, bucket)] chunks covering range(n)."""
+        big = self.buckets[-1]
+        out, i = [], 0
+        while n - i > big:
+            out.append((i, i + big, big))
+            i += big
+        out.append((i, n, self.bucket_for(n - i)))
+        return out
+
+
+def pad_ints(xs, bucket: int, fill: int) -> list:
+    """Pad a request column to the bucket size with a benign fill."""
+    return list(xs) + [fill] * (bucket - len(xs))
+
+
+def batch_sharding(mesh) -> NamedSharding:
+    """Shard the leading (batch) axis across every mesh axis."""
+    return NamedSharding(mesh, P(tuple(mesh.axis_names), None))
+
+
+def sharded_jit(fn, mesh, batched_argnums, n_args: int, n_out: int = 1):
+    """jit `fn`; under a mesh, shard the batched args and all outputs on
+    the batch axis and replicate the rest (e.g. a cached BarrettContext,
+    which is a pytree -- the replicated sharding applies to its leaves).
+    """
+    if mesh is None:
+        return jax.jit(fn)
+    sh = batch_sharding(mesh)
+    rep = NamedSharding(mesh, P())
+    batched = set(batched_argnums)
+    in_sh = tuple(sh if i in batched else rep for i in range(n_args))
+    out_sh = sh if n_out == 1 else tuple(sh for _ in range(n_out))
+    return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+
+
+class CompiledBuckets:
+    """Lazy cache of compiled executables, keyed by (op, bucket)."""
+
+    def __init__(self):
+        self._fns: dict[object, object] = {}
+
+    def get(self, key, build):
+        if key not in self._fns:
+            self._fns[key] = build()
+        return self._fns[key]
+
+    def __len__(self) -> int:
+        return len(self._fns)

@@ -5,21 +5,20 @@ Requests are Python ints; the service packs them into fixed-width limb
 batches, pads the batch to the compiled batch size, runs the jitted
 vmapped divmod (sharded across all available devices when a mesh is
 given), and unpacks exact results.  One compiled executable per
-(m_limbs, batch_bucket).
+(m_limbs, batch_bucket).  Bucket planning, padding, and mesh sharding
+live in `serving.batching`, shared with `ModArithService`.
 """
 
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import numpy as np
-import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import bigint as bi
 from repro.core import shinv as S
+from . import batching as BT
 
 
 class BigintDivisionService:
@@ -28,39 +27,30 @@ class BigintDivisionService:
         self.m = m_limbs
         self.mesh = mesh
         self.impl = impl
-        self.buckets = sorted(batch_buckets)
-        self._fns: dict[int, object] = {}
+        self.batcher = BT.Batcher(batch_buckets)
+        self._fns = BT.CompiledBuckets()
+
+    @property
+    def buckets(self):
+        return list(self.batcher.buckets)
 
     def _fn(self, bucket: int):
-        if bucket not in self._fns:
-            f = partial(S.divmod_batch, impl=self.impl)
-            if self.mesh is not None:
-                axes = tuple(self.mesh.axis_names)
-                sh = NamedSharding(self.mesh, P(axes, None))
-                f = jax.jit(f, in_shardings=(sh, sh),
-                            out_shardings=(sh, sh))
-            else:
-                f = jax.jit(f)
-            self._fns[bucket] = f
-        return self._fns[bucket]
+        return self._fns.get(bucket, lambda: BT.sharded_jit(
+            partial(S.divmod_batch, impl=self.impl), self.mesh,
+            batched_argnums=(0, 1), n_args=2, n_out=2))
 
     def divide(self, us: list[int], vs: list[int]):
         """Exact (q, r) lists for batched u/v (v > 0)."""
         n = len(us)
         assert n == len(vs) and n > 0
-        bucket = next((b for b in self.buckets if b >= n),
-                      self.buckets[-1])
-        if n > bucket:      # split oversized requests
-            qs, rs = [], []
-            for i in range(0, n, bucket):
-                q, r = self.divide(us[i:i + bucket], vs[i:i + bucket])
-                qs += q
-                rs += r
-            return qs, rs
-        u_pad = us + [0] * (bucket - n)
-        v_pad = vs + [1] * (bucket - n)
-        ua = jnp.asarray(bi.batch_from_ints(u_pad, self.m))
-        va = jnp.asarray(bi.batch_from_ints(v_pad, self.m))
-        q, r = self._fn(bucket)(ua, va)
-        return (bi.batch_to_ints(np.asarray(q)[:n]),
-                bi.batch_to_ints(np.asarray(r)[:n]))
+        qs, rs = [], []
+        for lo, hi, bucket in self.batcher.plan(n):
+            u_pad = BT.pad_ints(us[lo:hi], bucket, 0)
+            v_pad = BT.pad_ints(vs[lo:hi], bucket, 1)
+            ua = jnp.asarray(bi.batch_from_ints(u_pad, self.m))
+            va = jnp.asarray(bi.batch_from_ints(v_pad, self.m))
+            q, r = self._fn(bucket)(ua, va)
+            keep = hi - lo
+            qs += bi.batch_to_ints(np.asarray(q)[:keep])
+            rs += bi.batch_to_ints(np.asarray(r)[:keep])
+        return qs, rs

@@ -1,0 +1,131 @@
+"""Modular-arithmetic serving frontend on cached Barrett contexts.
+
+`ModArithService` keys a bounded per-modulus cache of device-resident
+`BarrettContext`s (one Newton-iterated shinv each) and serves `reduce`,
+`modmul`, and `modexp` over Python-int request batches.  The first
+request against a modulus pays the precompute; every later request --
+and every internal step of a modexp ladder -- reuses the cached shifted
+inverse, so a reduction costs two truncated multiplications instead of
+a full division.  Bucketing, padding, and mesh sharding are shared with
+`BigintDivisionService` via `serving.batching`; the context is
+replicated across the mesh while the request batch is sharded.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import bigint as bi
+from repro.core import modarith as MA
+from . import batching as BT
+
+
+class ModArithService:
+    """Batched modular arithmetic at one (modulus-storage) precision.
+
+    m_limbs:    storage width of moduli/residues (values < B^m_limbs)
+    e_limbs:    storage width of modexp exponents (default m_limbs)
+    impl:       multiplication kernel ("scan" | "blocked" | "pallas")
+    windowed:   size-bucketed Newton refinement in the precompute
+    window_bits: modexp ladder window (must divide 16)
+    max_cached_moduli: LRU bound on device-resident contexts
+    """
+
+    def __init__(self, m_limbs: int, mesh=None, impl: str | None = None,
+                 windowed: bool = True, window_bits: int = 4,
+                 e_limbs: int | None = None,
+                 batch_buckets=(64, 256, 1024),
+                 max_cached_moduli: int = 64):
+        self.m = m_limbs
+        self.e_limbs = e_limbs if e_limbs is not None else m_limbs
+        self.mesh = mesh
+        self.impl = impl
+        self.windowed = windowed
+        self.window_bits = window_bits
+        self.batcher = BT.Batcher(batch_buckets)
+        self._fns = BT.CompiledBuckets()
+        self._ctxs: OrderedDict[int, MA.BarrettContext] = OrderedDict()
+        self.max_cached = max_cached_moduli
+        self.ctx_hits = 0
+        self.ctx_misses = 0
+        self._precompute = jax.jit(partial(
+            MA.barrett_precompute, impl=impl, windowed=windowed))
+
+    # -- per-modulus context cache ----------------------------------------
+
+    def context(self, v: int) -> MA.BarrettContext:
+        """Device-resident Barrett context for v, LRU-cached."""
+        if v <= 0:
+            raise ValueError("modulus must be positive")
+        if v >= bi.BASE ** self.m:
+            raise OverflowError(f"modulus does not fit in {self.m} limbs")
+        if v in self._ctxs:
+            self._ctxs.move_to_end(v)
+            self.ctx_hits += 1
+            return self._ctxs[v]
+        self.ctx_misses += 1
+        ctx = self._precompute(jnp.asarray(bi.from_int(v, self.m)))
+        self._ctxs[v] = ctx
+        while len(self._ctxs) > self.max_cached:
+            self._ctxs.popitem(last=False)
+        return ctx
+
+    # -- compiled per-bucket executables ----------------------------------
+
+    def _fn(self, op: str, bucket: int):
+        def build():
+            impl = self.impl
+            if op == "reduce":
+                f = partial(MA.reduce_shared, impl=impl)
+                batched = (1,)
+                n_args = 2
+            elif op == "modmul":
+                f = partial(MA.modmul_shared, impl=impl)
+                batched = (1, 2)
+                n_args = 3
+            elif op == "modexp":
+                f = partial(MA.modexp_shared, impl=impl,
+                            window_bits=self.window_bits)
+                batched = (1, 2)
+                n_args = 3
+            else:
+                raise ValueError(op)
+            return BT.sharded_jit(f, self.mesh, batched, n_args, n_out=1)
+        return self._fns.get((op, bucket), build)
+
+    def _run(self, op: str, v: int, columns, widths) -> list[int]:
+        """Pack int columns to limb batches, run per bucket, unpack."""
+        n = len(columns[0])
+        assert n > 0 and all(len(c) == n for c in columns)
+        ctx = self.context(v)
+        out: list[int] = []
+        for lo, hi, bucket in self.batcher.plan(n):
+            arrs = [jnp.asarray(bi.batch_from_ints(
+                        BT.pad_ints(col[lo:hi], bucket, 0), w))
+                    for col, w in zip(columns, widths)]
+            res = self._fn(op, bucket)(ctx, *arrs)
+            out += bi.batch_to_ints(np.asarray(res)[:hi - lo])
+        return out
+
+    # -- public entry points ----------------------------------------------
+
+    def reduce(self, xs: list[int], v: int) -> list[int]:
+        """[x mod v] for double-width x (x < B^(2 m_limbs))."""
+        for x in xs:
+            if not 0 <= x < bi.BASE ** (2 * self.m):
+                raise OverflowError(
+                    f"reduce operand exceeds {2 * self.m} limbs")
+        return self._run("reduce", v, [xs], [2 * self.m])
+
+    def modmul(self, a: list[int], b: list[int], v: int) -> list[int]:
+        """[(a_i * b_i) mod v] for a_i, b_i < B^m_limbs."""
+        return self._run("modmul", v, [a, b], [self.m, self.m])
+
+    def modexp(self, a: list[int], e: list[int], v: int) -> list[int]:
+        """[pow(a_i, e_i, v)] -- fixed-window ladder, one cached shinv."""
+        return self._run("modexp", v, [a, e], [self.m, self.e_limbs])

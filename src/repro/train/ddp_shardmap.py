@@ -28,6 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as T
+from repro.utils import compat
 from repro.optim import adamw
 
 
@@ -76,7 +77,7 @@ def make_ddp_train_step(cfg, opt_cfg: adamw.AdamWConfig, mesh: Mesh,
 
     rep = P()
     shard_b = P("data")
-    fn = jax.shard_map(
+    fn = compat.shard_map(
         local_step, mesh=mesh,
         in_specs=(rep, rep, rep,
                   jax.tree.map(lambda _: shard_b, {"tokens": 0,

@@ -28,6 +28,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.models import transformer as T
 from repro.models.sharding import use_mesh
+from repro.utils import compat
 
 
 def _stage_apply(blocks_slice, x, cfg, positions):
@@ -93,7 +94,7 @@ def make_pipelined_forward(cfg, mesh: Mesh, n_micro: int):
         return out.reshape(b, s, d)
 
     pod_blocks = P("pod")      # prefix spec: applies to every leaf
-    mapped = jax.shard_map(
+    mapped = compat.shard_map(
         fn, mesh=mesh,
         in_specs=(pod_blocks, P()),
         out_specs=P(),

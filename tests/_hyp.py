@@ -1,0 +1,29 @@
+"""Optional-hypothesis shim: the real library when installed, otherwise
+skip-marking stand-ins so the suite still collects and every
+non-property test runs.  Install the dev extra (`pip install -e
+.[dev]`) to get the property tests back.
+"""
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed")(f)
+
+    def settings(*_args, **_kwargs):
+        return lambda f: f
+
+    class _Strategies:
+        """st.integers(...) etc. -- only ever passed to the stub
+        `given`, so any placeholder value works."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _Strategies()

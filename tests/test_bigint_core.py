@@ -5,7 +5,7 @@ import random
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import bigint as bi, pyref as R, shinv as S
 

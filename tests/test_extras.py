@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro import configs
 from repro.models import transformer as T
@@ -32,8 +32,15 @@ def test_ssd_chunked_matches_naive():
 
 def test_jamba_decode_matches_forward():
     """Hybrid (mamba + attn + MoE) decode parity with the parallel
-    forward -- covers mamba conv-window and ssm-state decode paths."""
+    forward -- covers mamba conv-window and ssm-state decode paths.
+
+    Capacity is raised into the drop-free regime: GShard capacity
+    dropping is batch-dependent (prefill tokens compete for expert
+    slots; a single decode token never overflows), so parity is only
+    defined when nothing drops."""
+    import dataclasses
     cfg = configs.get_config("jamba-1.5-large-398b").reduced()
+    cfg = dataclasses.replace(cfg, capacity_factor=16.0)
     key = jax.random.PRNGKey(7)
     params = T.init_params(cfg, key)
     b, s = 1, 8

@@ -1,0 +1,198 @@
+"""Barrett modular arithmetic on the cached shifted inverse: exactness
+vs Python ints at multiple precisions, edge cases, impl dispatch."""
+
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from _hyp import given, settings, st
+from repro.core import bigint as bi
+from repro.core import modarith as MA
+from repro.core import shinv as S
+
+B = bi.BASE
+
+
+def _ctx(v, m, **kw):
+    return MA.barrett_precompute(jnp.asarray(bi.from_int(v, m)), **kw)
+
+
+def _reduce(ctx, x, m, **kw):
+    return bi.to_int(MA.barrett_reduce(
+        ctx, jnp.asarray(bi.from_int(x, 2 * m)), **kw))
+
+
+# ---------------------------------------------------------------------------
+# barrett_reduce: exact at >= 3 precisions, vs Python % and divmod_fixed
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [4, 16, 32])      # 64 / 256 / 512 bits
+def test_reduce_random(m):
+    rnd = random.Random(m)
+    for _ in range(8):
+        v = rnd.randint(1, B ** m - 1)
+        x = rnd.randint(0, B ** (2 * m) - 1)
+        ctx = _ctx(v, m)
+        assert _reduce(ctx, x, m) == x % v, (m, v, x)
+
+
+def test_reduce_matches_divmod_fixed():
+    """Same remainder as the division subsystem on the same operands."""
+    rnd = random.Random(0)
+    m = 8
+    v = rnd.randint(1, B ** m - 1)
+    ctx = _ctx(v, m)
+    for _ in range(4):
+        x = rnd.randint(0, B ** (2 * m) - 1)
+        xw = jnp.asarray(bi.from_int(x, 2 * m))
+        vw = jnp.asarray(bi.from_int(v, 2 * m))
+        _, r_div = S.divmod_fixed(xw, vw)
+        r_bar = MA.barrett_reduce(ctx, xw)
+        assert bi.to_int(r_bar) == bi.to_int(r_div) == x % v
+
+
+def test_reduce_edge_cases():
+    m = 4
+    # v a power of B (shinv special case), v single-limb, v = 1
+    for v in (1, 7, B - 1, B, B ** 2, B ** 3, B ** 4 - 1):
+        ctx = _ctx(v, m)
+        for x in (0, 1, v - 1, v, v + 1, B ** 5, B ** (2 * m) - 1):
+            assert _reduce(ctx, x, m) == x % v, (v, x)
+
+
+def test_reduce_identity_below_modulus():
+    """x < v: the reduction is the identity."""
+    rnd = random.Random(1)
+    m = 8
+    for _ in range(4):
+        v = rnd.randint(2, B ** m - 1)
+        x = rnd.randint(0, v - 1)
+        assert _reduce(_ctx(v, m), x, m) == x
+
+
+def test_reduce_rejects_oversized_input():
+    ctx = _ctx(7, 4)
+    with pytest.raises(ValueError):
+        MA.barrett_reduce(ctx, jnp.zeros((9,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# modmul / modexp vs Python pow at >= 3 precisions, both impls
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m", [4, 16, 32])
+def test_modmul_random(m):
+    rnd = random.Random(m + 100)
+    for _ in range(6):
+        v = rnd.randint(1, B ** m - 1)
+        a = rnd.randint(0, B ** m - 1)
+        b = rnd.randint(0, B ** m - 1)
+        got = bi.to_int(MA.modmul(_ctx(v, m),
+                                  jnp.asarray(bi.from_int(a, m)),
+                                  jnp.asarray(bi.from_int(b, m))))
+        assert got == (a * b) % v, (m, v, a, b)
+
+
+@pytest.mark.parametrize("impl", ["scan", "blocked"])
+@pytest.mark.parametrize("m", [4, 16])          # 64 / 256 bits
+def test_modexp_vs_pow(impl, m):
+    rnd = random.Random(m * 7 + len(impl))
+    for _ in range(3):
+        v = rnd.randint(2, B ** m - 1)
+        a = rnd.randint(0, B ** m - 1)
+        e = rnd.randint(0, B ** 2 - 1)          # 32-bit exponents
+        ctx = _ctx(v, m, impl=impl)
+        got = bi.to_int(MA.modexp(ctx, jnp.asarray(bi.from_int(a, m)),
+                                  jnp.asarray(bi.from_int(e, 2)),
+                                  impl=impl))
+        assert got == pow(a, e, v), (impl, m, v, a, e)
+
+
+def test_modexp_exponent_edges():
+    m = 4
+    rnd = random.Random(3)
+    for v in (1, 97, B ** 2, B ** m - 1):
+        ctx = _ctx(v, m)
+        a = rnd.randint(0, B ** m - 1)
+        for e in (0, 1, 2, 3):
+            got = bi.to_int(MA.modexp(
+                ctx, jnp.asarray(bi.from_int(a, m)),
+                jnp.asarray(bi.from_int(e, 1))))
+            assert got == pow(a, e, v), (v, a, e)
+
+
+@pytest.mark.parametrize("window_bits", [1, 2, 8])
+def test_modexp_window_sizes(window_bits):
+    m = 4
+    v, a, e = 1000003, 987654321, 0xBEEF
+    got = bi.to_int(MA.modexp(_ctx(v, m), jnp.asarray(bi.from_int(a, m)),
+                              jnp.asarray(bi.from_int(e, 1)),
+                              window_bits=window_bits))
+    assert got == pow(a, e, v)
+
+
+def test_modexp_rejects_bad_window():
+    with pytest.raises(ValueError):
+        MA.modexp(_ctx(7, 4), jnp.asarray(bi.from_int(3, 4)),
+                  jnp.asarray(bi.from_int(1, 1)), window_bits=3)
+
+
+# ---------------------------------------------------------------------------
+# batched entry points
+# ---------------------------------------------------------------------------
+
+def test_batched_per_instance_moduli():
+    rnd = random.Random(9)
+    m, em, n = 8, 2, 5
+    vs = [rnd.randint(1, B ** m - 1) for _ in range(n)]
+    xs = [rnd.randint(0, B ** (2 * m) - 1) for _ in range(n)]
+    az = [rnd.randint(0, B ** m - 1) for _ in range(n)]
+    bz = [rnd.randint(0, B ** m - 1) for _ in range(n)]
+    es = [rnd.randint(0, B ** em - 1) for _ in range(n)]
+    r = MA.reduce_batch(jnp.asarray(bi.batch_from_ints(xs, 2 * m)),
+                        jnp.asarray(bi.batch_from_ints(vs, m)))
+    assert bi.batch_to_ints(np.asarray(r)) == [x % v for x, v in zip(xs, vs)]
+    mm = MA.modmul_batch(jnp.asarray(bi.batch_from_ints(az, m)),
+                         jnp.asarray(bi.batch_from_ints(bz, m)),
+                         jnp.asarray(bi.batch_from_ints(vs, m)))
+    assert bi.batch_to_ints(np.asarray(mm)) == \
+        [(a * b) % v for a, b, v in zip(az, bz, vs)]
+    me = MA.modexp_batch(jnp.asarray(bi.batch_from_ints(az, m)),
+                         jnp.asarray(bi.batch_from_ints(es, em)),
+                         jnp.asarray(bi.batch_from_ints(vs, m)))
+    assert bi.batch_to_ints(np.asarray(me)) == \
+        [pow(a, e, v) for a, e, v in zip(az, es, vs)]
+
+
+def test_shared_context_batch():
+    rnd = random.Random(11)
+    m, em, n = 8, 2, 4
+    v = rnd.randint(2, B ** m - 1)
+    ctx = _ctx(v, m)
+    az = [rnd.randint(0, B ** m - 1) for _ in range(n)]
+    es = [rnd.randint(0, B ** em - 1) for _ in range(n)]
+    me = MA.modexp_shared_batch(ctx, jnp.asarray(bi.batch_from_ints(az, m)),
+                                jnp.asarray(bi.batch_from_ints(es, em)))
+    assert bi.batch_to_ints(np.asarray(me)) == [pow(a, e, v) for a, e
+                                                in zip(az, es)]
+
+
+@pytest.mark.slow
+def test_reduce_4096bit():
+    """One large-precision pass: 4096-bit modulus, 8192-bit operand."""
+    rnd = random.Random(42)
+    m = 256
+    v = rnd.randint(B ** (m - 1), B ** m - 1)
+    x = rnd.randint(0, B ** (2 * m) - 1)
+    assert _reduce(_ctx(v, m), x, m) == x % v
+
+
+@given(st.integers(0, B ** 16 - 1), st.integers(0, B ** 16 - 1),
+       st.integers(1, B ** 8 - 1))
+@settings(max_examples=20, deadline=None)
+def test_reduce_property(x_lo, x_hi, v):
+    m = 8
+    x = x_hi * B ** 8 + x_lo
+    assert _reduce(_ctx(v, m), x, m) == x % v

@@ -1,0 +1,86 @@
+"""Serving layer: ModArithService context cache + shared batching."""
+
+import random
+
+import pytest
+
+from repro.core import bigint as bi
+from repro.serving import batching as BT
+from repro.serving.modexp_service import ModArithService
+
+B = bi.BASE
+
+
+# ---------------------------------------------------------------------------
+# batching machinery (shared with BigintDivisionService)
+# ---------------------------------------------------------------------------
+
+def test_batcher_plan():
+    bt = BT.Batcher((4, 16))
+    assert bt.bucket_for(1) == 4
+    assert bt.bucket_for(5) == 16
+    assert bt.bucket_for(99) == 16          # oversized -> largest
+    assert bt.plan(3) == [(0, 3, 4)]
+    assert bt.plan(16) == [(0, 16, 16)]
+    # oversized: largest-bucket chunks, fitted tail
+    assert bt.plan(35) == [(0, 16, 16), (16, 32, 16), (32, 35, 4)]
+
+
+def test_pad_ints():
+    assert BT.pad_ints([5, 6], 4, 1) == [5, 6, 1, 1]
+    assert BT.pad_ints([5], 1, 0) == [5]
+
+
+# ---------------------------------------------------------------------------
+# ModArithService
+# ---------------------------------------------------------------------------
+
+def test_service_endpoints_exact():
+    rnd = random.Random(5)
+    m = 8
+    svc = ModArithService(m_limbs=m, e_limbs=2, batch_buckets=(4,))
+    v = rnd.randint(2, B ** m - 1)
+    xs = [rnd.randint(0, B ** (2 * m) - 1) for _ in range(10)]
+    assert svc.reduce(xs, v) == [x % v for x in xs]   # splits 10 > 4
+    a = [rnd.randint(0, B ** m - 1) for _ in range(3)]
+    b = [rnd.randint(0, B ** m - 1) for _ in range(3)]
+    assert svc.modmul(a, b, v) == [(x * y) % v for x, y in zip(a, b)]
+    e = [rnd.randint(0, B ** 2 - 1) for _ in range(3)]
+    assert svc.modexp(a, e, v) == [pow(x, y, v) for x, y in zip(a, e)]
+
+
+def test_service_context_cache_and_lru():
+    rnd = random.Random(6)
+    m = 4
+    svc = ModArithService(m_limbs=m, e_limbs=1, batch_buckets=(2,),
+                          max_cached_moduli=2)
+    vs = [rnd.randint(2, B ** m - 1) for _ in range(3)]
+    for v in vs:
+        svc.reduce([rnd.randint(0, B ** (2 * m) - 1)], v)
+    assert svc.ctx_misses == 3 and svc.ctx_hits == 0
+    assert len(svc._ctxs) == 2              # LRU bound enforced
+    svc.reduce([1], vs[-1])                 # most recent: hit
+    assert svc.ctx_hits == 1
+    svc.reduce([1], vs[0])                  # evicted: miss again
+    assert svc.ctx_misses == 4
+
+
+def test_service_input_validation():
+    svc = ModArithService(m_limbs=4, batch_buckets=(2,))
+    with pytest.raises(ValueError):
+        svc.context(0)
+    with pytest.raises(OverflowError):
+        svc.context(B ** 4)
+    with pytest.raises(OverflowError):
+        svc.reduce([B ** 8], 7)
+
+
+def test_service_same_ladder_different_exponents():
+    """Padding exponents of different bit lengths must stay exact
+    (constant trip count, where-masked windows)."""
+    m = 4
+    svc = ModArithService(m_limbs=m, e_limbs=2, batch_buckets=(4,))
+    v = 1000003
+    a = [2, 3, 5, 7]
+    e = [0, 1, 65535, 2 ** 31 - 1]
+    assert svc.modexp(a, e, v) == [pow(x, y, v) for x, y in zip(a, e)]

@@ -93,7 +93,10 @@ def test_straggler_watchdog_fires():
     with tempfile.TemporaryDirectory() as d:
         tr = Trainer(cfg, adamw.AdamWConfig(),
                      TrainerConfig(steps=10, ckpt_every=100, ckpt_dir=d,
-                                   log_every=100, straggler_factor=2.5),
+                                   # the injected 1.0s straggle is ~100x a
+                                   # normal step; a high factor keeps host
+                                   # scheduling noise from firing early
+                                   log_every=100, straggler_factor=20.0),
                      _data_cfg(cfg), fault_hook=fault,
                      straggler_hook=lambda s, dt: events.append((s, dt)))
         st = tr.run()
@@ -190,7 +193,8 @@ def test_quantized_psum_error_feedback_unbiased():
     def one(g, e):
         return _quantized_psum(g, e, "data")
 
-    f = jax.jit(jax.shard_map(
+    from repro.utils import compat
+    f = jax.jit(compat.shard_map(
         one, mesh=mesh,
         in_specs=(jax.sharding.PartitionSpec(),
                   jax.sharding.PartitionSpec()),
