@@ -18,6 +18,9 @@ EXPERIMENTS.md SPerf) closes the gap toward the model.
 
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import numpy as np
@@ -53,7 +56,11 @@ def make_dataset(rng, m, insts):
 
 
 def run(sizes=(2 ** 10, 2 ** 12, 2 ** 14, 2 ** 16), validate=True,
-        impl="blocked"):
+        impl="blocked", windowed=True):
+    """Per-size mul vs div timings.  `sizes` may extend to the paper's
+    2^15..2^18-bit range (`--paper-range`); with impl="pallas_batched"
+    the vmapped mul/div route whole batches to the natively batched
+    kernel via the custom_vmap rule in kernels/ops.py."""
     rng = np.random.default_rng(0)
     rows = []
     for bits in sizes:
@@ -65,7 +72,8 @@ def run(sizes=(2 ** 10, 2 ** 12, 2 ** 14, 2 ** 16), validate=True,
             lambda a, b: K.mul(a, b, 2 * m, impl=impl)))
         t_mul = _bench(mul, u, v)
 
-        div = jax.jit(lambda a, b: S.divmod_batch(a, b, impl=impl))
+        div = jax.jit(lambda a, b: S.divmod_batch(a, b, impl=impl,
+                                                  windowed=windowed))
         t_div = _bench(div, u, v)
 
         # GMP proxy: Python ints (exact, highly optimized C)
@@ -82,23 +90,58 @@ def run(sizes=(2 ** 10, 2 ** 12, 2 ** 14, 2 ** 16), validate=True,
                     ok = False
                     break
         rows.append({
-            "bits": bits, "insts": insts,
-            "mul_ms": t_mul * 1e3, "div_ms": t_div * 1e3,
-            "div_over_mul": t_div / t_mul,
-            "py_int_ms": t_py * 1e3,
+            "bits": bits, "insts": insts, "impl": impl,
+            "windowed": windowed,
+            "mul_ms": round(t_mul * 1e3, 3),
+            "div_ms": round(t_div * 1e3, 3),
+            "div_over_mul": round(t_div / t_mul, 3),
+            "py_int_ms": round(t_py * 1e3, 3),
             "exact": ok,
         })
     return rows
 
 
-def main():
-    rows = run()
-    print("bits,insts,mul_ms,div_ms,div_over_mul,py_int_ms,exact")
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        description="mul vs div throughput across precisions (Table 1)")
+    ap.add_argument("--sizes", type=int, nargs="+",
+                    default=[2 ** 10, 2 ** 12, 2 ** 14, 2 ** 16],
+                    help="operand sizes in bits")
+    ap.add_argument("--paper-range", action="store_true",
+                    help="the paper's target sizes: 2^15..2^18 bits")
+    ap.add_argument("--impl", default="blocked",
+                    choices=list(K.IMPLS))
+    ap.add_argument("--no-windowed", dest="windowed", action="store_false")
+    ap.add_argument("--no-validate", dest="validate", action="store_false")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="append rows to a JSON file (keyed by "
+                         "bits/impl/windowed, rewritten sorted)")
+    args = ap.parse_args(argv)
+    if args.paper_range:
+        args.sizes = [2 ** 15, 2 ** 16, 2 ** 17, 2 ** 18]
+
+    rows = run(sizes=args.sizes, validate=args.validate, impl=args.impl,
+               windowed=args.windowed)
+    print("bits,insts,impl,windowed,mul_ms,div_ms,div_over_mul,"
+          "py_int_ms,exact")
     for r in rows:
-        print(f"{r['bits']},{r['insts']},{r['mul_ms']:.1f},"
-              f"{r['div_ms']:.1f},{r['div_over_mul']:.2f},"
-              f"{r['py_int_ms']:.1f},{r['exact']}")
+        print(f"{r['bits']},{r['insts']},{r['impl']},{r['windowed']},"
+              f"{r['mul_ms']:.1f},{r['div_ms']:.1f},"
+              f"{r['div_over_mul']:.2f},{r['py_int_ms']:.1f},{r['exact']}")
     assert all(r["exact"] for r in rows)
+    if args.json:
+        import sys
+        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        from bigmul_sweep import merge_json   # the deterministic writer
+        # merge_json keys on (bits, batch, impl); a "table1:" namespace
+        # (plus a windowed tag) keeps these rows from colliding with
+        # bigmul_sweep rows that share bits/batch/impl in the same file
+        rows_keyed = [dict(r, batch=r["insts"],
+                           impl="table1:" + r["impl"]
+                           + ("" if r["windowed"] else "+unwindowed"))
+                      for r in rows]
+        merge_json(args.json, rows_keyed)
+        print(f"wrote {args.json}")
     return rows
 
 

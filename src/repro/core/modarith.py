@@ -38,8 +38,12 @@ JAX adaptation notes (mirroring shinv.py):
     table select, so it traces at static shape and vmaps cleanly.
 
 `impl` selects the multiplication kernel ("scan" | "blocked" |
-"pallas"), `windowed` the size-bucketed Newton refinement -- both
-threaded through exactly like `shinv.divmod_batch`.
+"pallas" | "pallas_batched"), `windowed` the size-bucketed Newton
+refinement -- both threaded through exactly like `shinv.divmod_batch`.
+With "pallas_batched" (the TPU default) `K.mul` is batch-aware: the
+vmapped `reduce_shared` / `modmul_shared` / `modexp_shared` hot paths
+execute each truncated multiplication as one natively batched kernel
+launch across the whole request batch.
 """
 
 from __future__ import annotations

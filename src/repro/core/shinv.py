@@ -20,6 +20,11 @@ JAX adaptation notes (vs. the CUDA implementation in the paper):
   * The initial 4-by-2-digit quotient B^3 quo V is computed exactly in
     uint32 (no 64-bit hardware integers on TPU): one wrap-around 32/32
     division plus a 16-step restoring division, all vectorizable.
+  * Multiplications dispatch through `K.mul`, which is batch-aware:
+    with `impl="pallas_batched"` (the TPU default) a `custom_vmap`
+    rule hands each whole vmapped batch to the natively batched Pallas
+    kernel -- `divmod_batch` and every windowed Refine product launch
+    one kernel per multiplication, not one per batch lane.
 
 Sign handling and the delta in {-1,0,+1} quotient correction follow the
 paper's revised Theorem 2.
@@ -220,16 +225,21 @@ def divmod_fixed(u: jax.Array, v: jax.Array,
 @partial(jax.jit, static_argnames=("impl", "windowed"))
 def divmod_batch(u: jax.Array, v: jax.Array, impl: str | None = None,
                  windowed: bool = True):
-    """Batched division: u, v of shape (batch, M)."""
+    """Batched division: u, v of shape (batch, M).
+
+    With `impl="pallas_batched"` every internal multiplication runs as
+    ONE natively batched kernel launch over the whole batch (the
+    custom_vmap rule in kernels/ops.py), not a per-lane grid."""
     return jax.vmap(
         lambda a, b: divmod_fixed(a, b, impl=impl, windowed=windowed)
     )(u, v)
 
 
-@partial(jax.jit, static_argnames=("iters_max", "impl"))
+@partial(jax.jit, static_argnames=("iters_max", "impl", "windowed"))
 def shinv_batch(v: jax.Array, h: jax.Array, iters_max: int,
-                impl: str | None = None):
+                impl: str | None = None, windowed: bool = True):
     """Batched whole shifted inverse: v (batch, W), h (batch,)."""
     return jax.vmap(
-        lambda vv, hh: shinv_fixed(vv, hh, iters_max=iters_max, impl=impl)
+        lambda vv, hh: shinv_fixed(vv, hh, iters_max=iters_max, impl=impl,
+                                   windowed=windowed)
     )(v, h)

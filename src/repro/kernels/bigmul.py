@@ -5,12 +5,17 @@ multiplication:
 
   CUDA (paper)                          TPU Pallas (here)
   ------------------------------------  --------------------------------
-  one instance per CUDA block           one instance per grid row (vmap)
-  operands staged in shared memory      operand tiles in VMEM (BlockSpec)
+  one instance per CUDA block           one instance (block) per leading
+                                        grid row (`mul_pallas_batched`)
+  operands staged in shared memory      operand tiles in VMEM; Toeplitz
+                                        tiles built in-kernel from the
+                                        raw sub-digit block (BlockSpec)
   per-thread Q-element digit loops      (T x 2T) Toeplitz tiles on the MXU
   64-bit digits                         16-bit limbs split to 8-bit
                                         sub-digits; int32 accumulation
-  warp shuffles for carries             separate associative-scan pass
+  warp shuffles for carries             carry pre-resolution fused into
+                                        the kernel epilogue; one short
+                                        associative-scan fixup in XLA
 
 The product is a convolution of base-2^8 sub-digit sequences.  It is
 blocked into T-sized tiles; each (i, j) block pair contributes
@@ -19,9 +24,22 @@ scalar-prefetched schedule walks the pairs grouped by diagonal so the
 output tile stays resident in VMEM and is accumulated in int32 across
 the pairs of its diagonal (grid revisiting).
 
-The kernel emits per-diagonal raw sums; overlap-add, carry resolution
-(one associative scan) and 16-bit limb packing happen in plain XLA --
-they are linear-cost, memory-bound passes.
+Two generations of the kernel live here:
+
+  * `mul_pallas` / `mulmod_pallas` -- single instance, batched by the
+    generic `jax.vmap` rule.  Toeplitz tiles are pre-materialized on
+    the host as a (nv, t, 2t) tensor (a ~2t-times blowup of the
+    operand) and the full carry resolution (4 local passes + scan)
+    runs in XLA on raw per-diagonal sums.
+  * `mul_pallas_batched` -- the batch is a native leading grid axis
+    (BLOCK_B instances per grid step), Toeplitz tiles are staged in
+    VMEM inside the kernel by log2(T) conditional rotates of the raw
+    sub-digit block (no host-side blowup), and the last pair of each
+    diagonal pre-resolves its tile's carries in the epilogue, so XLA
+    only overlap-adds small (< 2^9) digits and finishes with a 2-pass
+    + associative-scan fixup.  This is the paper's Fig. 2
+    one-instance-per-block schedule; `impl="pallas_batched"` in
+    kernels/ops.py.
 
 Exactness: sub-digits < 2^8, tile products < 2^16 * T, a diagonal
 accumulates at most min(nu, nv) tiles: max raw value
@@ -61,21 +79,36 @@ def _toeplitz_host(v8: jax.Array, nv: int, t: int) -> jax.Array:
     return jnp.where((s - c >= 0) & (s - c < t), tile, 0)
 
 
-def _pair_schedule(nu: int, nv: int) -> tuple[np.ndarray, ...]:
-    """Static schedule: all (i, j) block pairs sorted by diagonal d=i+j.
+def _pair_schedule_pruned(nu: int, nv: int,
+                          d_keep: int | None = None) -> tuple[np.ndarray, ...]:
+    """Static schedule: (i, j) block pairs with i+j < d_keep, sorted by
+    diagonal d = i+j.
 
-    Returns (i_idx, j_idx, d_idx, first_flag) int32 arrays of length
-    nu*nv; first_flag marks the first pair of each diagonal (output
-    tile must be zero-initialized on revisit-entry).
+    Returns (i_idx, j_idx, d_idx, first_flag, last_flag) int32 arrays;
+    first_flag marks the first pair of each diagonal (output tile must
+    be zero-initialized on revisit-entry), last_flag the last (the
+    batched kernel runs its carry pre-resolution epilogue there).
     """
-    pairs = [(i + j, i, j) for i in range(nu) for j in range(nv)]
+    if d_keep is None:
+        d_keep = nu + nv - 1
+    pairs = [(i + j, i, j) for i in range(nu) for j in range(nv)
+             if i + j < d_keep]
     pairs.sort()
     d_idx = np.array([p[0] for p in pairs], dtype=np.int32)
     i_idx = np.array([p[1] for p in pairs], dtype=np.int32)
     j_idx = np.array([p[2] for p in pairs], dtype=np.int32)
+    bound = (d_idx[1:] != d_idx[:-1]).astype(np.int32)
     first = np.ones(len(pairs), dtype=np.int32)
-    first[1:] = (d_idx[1:] != d_idx[:-1]).astype(np.int32)
-    return i_idx, j_idx, d_idx, first
+    first[1:] = bound
+    last = np.ones(len(pairs), dtype=np.int32)
+    last[:-1] = bound
+    return i_idx, j_idx, d_idx, first, last
+
+
+def _pair_schedule(nu: int, nv: int) -> tuple[np.ndarray, ...]:
+    """All (i, j) block pairs sorted by diagonal (no pruning, no last
+    flags) -- the single-instance kernel's schedule."""
+    return _pair_schedule_pruned(nu, nv)[:4]
 
 
 def _mul_kernel(i_ref, j_ref, d_ref, f_ref, u_ref, t_ref, o_ref):
@@ -182,8 +215,12 @@ def mulmod_pallas(u: jax.Array, v: jax.Array, l_max: int,
     v8 = _to_u8digits(v.astype(_U))
     nu = max(-(-u8.shape[0] // t), 1)
     nv = max(-(-v8.shape[0] // t), 1)
-    # diagonals d contribute outputs starting at d*t: keep d*t < 2*l_max*?
-    d_keep = -(-2 * l_max // t)                    # ceil
+    # Exact pruning bound: pair (i, j) on diagonal d = i+j writes raw
+    # sums only to sub-digit positions [d*t, (d+2)*t); the result keeps
+    # positions < 2*l_max, and carries travel strictly upward, so a
+    # pair contributes iff d*t < 2*l_max, i.e. d < ceil(2*l_max / t).
+    # Tested at/around l_max multiples of BLOCK_T//2 in test_kernels.
+    d_keep = -(-2 * l_max // t)
     nu_k = min(nu, d_keep)
     nv_k = min(nv, d_keep)
     u8 = jnp.zeros((nu_k * t,), _U).at[: min(u8.shape[0], nu_k * t)].set(
@@ -194,11 +231,7 @@ def mulmod_pallas(u: jax.Array, v: jax.Array, l_max: int,
     u8b = u8.reshape(nu_k, t).astype(_I)
     toep = _toeplitz_host(v8, nv_k, t)
 
-    i_idx, j_idx, d_idx, first = _pair_schedule(nu_k, nv_k)
-    keep = d_idx < d_keep                          # high diagonals skipped
-    i_idx, j_idx, d_idx = i_idx[keep], j_idx[keep], d_idx[keep]
-    first = np.ones(len(d_idx), dtype=np.int32)
-    first[1:] = (d_idx[1:] != d_idx[:-1]).astype(np.int32)
+    i_idx, j_idx, d_idx, first, _ = _pair_schedule_pruned(nu_k, nv_k, d_keep)
 
     ndiag = int(d_idx.max()) + 1 if len(d_idx) else 1
     seg = _call_pair_kernel(u8b, toep, i_idx, j_idx, d_idx, first,
@@ -218,3 +251,188 @@ def mulmod_pallas(u: jax.Array, v: jax.Array, l_max: int,
     limbs = _pack8(_resolve8(raw))
     idx = jnp.arange(out_width, dtype=_I)
     return jnp.where(idx < l_max, limbs, _U(0))
+
+
+# ---------------------------------------------------------------------------
+# natively batched kernel: batch as leading grid axis, in-kernel Toeplitz
+# staging, fused carry pre-resolution
+# ---------------------------------------------------------------------------
+
+# Instances processed per grid step.  The VMEM working set per step is
+# dominated by the (BLOCK_B, T, 2T) Toeplitz tiles: 16 * 128 * 256 *
+# 4 B = 2 MiB, which with rotate temporaries stays well inside a TPU
+# core's ~16 MiB VMEM.
+MAX_BLOCK_B = 16
+
+
+def pick_block_b(batch: int) -> int:
+    """Batch-block size for `mul_pallas_batched`: the power of two
+    <= MAX_BLOCK_B minimizing padded instance-steps ceil(batch/bb)*bb
+    (ties go to the larger block -> fewer grid rows)."""
+    best = 1
+    bb = 2
+    while bb <= MAX_BLOCK_B:
+        if -(-batch // bb) * bb <= -(-batch // best) * best:
+            best = bb
+        bb *= 2
+    return best
+
+
+def _toep_tile(vblk: jax.Array) -> jax.Array:
+    """(bb, t) sub-digit block -> (bb, t, 2t) Toeplitz tiles, in VMEM.
+
+    tile[b, c, s] = vblk[b, s-c] when 0 <= s-c < t else 0.  Built as
+    log2(t) conditional rotates of the zero-padded block: row c needs
+    rotation by c, composed from the binary digits of the row index.
+    A rotate's wrap-around lands inside the length-t zero pad
+    (pad[(s-c) mod 2t] with s-c outside [0, t) always hits the pad),
+    so no boundary mask is needed.
+    """
+    bb, t = vblk.shape
+    pad = jnp.concatenate([vblk, jnp.zeros_like(vblk)], axis=-1)
+    mat = jnp.broadcast_to(pad[:, None, :], (bb, t, 2 * t))
+    c = jax.lax.broadcasted_iota(_I, (1, t, 1), 1)
+    k = 0
+    while (1 << k) < t:
+        rolled = jnp.roll(mat, 1 << k, axis=-1)
+        mat = jnp.where(((c >> k) & 1) == 1, rolled, mat)
+        k += 1
+    return mat
+
+
+def _preresolve(e: jax.Array) -> jax.Array:
+    """In-kernel carry pre-resolution of one widened diagonal tile.
+
+    e: (bb, 3t) int32, raw sums < 2^31 in [:2t], zeros in the tail.
+    Four local split passes shrink every entry to <= 2^8; carries past
+    position 2t-1 walk into the widened tail (at most 4 positions), so
+    nothing is dropped.  After overlap-add of the <=3 tiles covering a
+    global position the sums are < 3*2^8 + 1, which the XLA fixup
+    finishes with 2 passes + one associative scan (`_resolve8`).
+    """
+    w = e.shape[-1]
+    idx = jax.lax.broadcasted_iota(_I, (1, w), 1)
+    for _ in range(4):                      # carry magnitude /2^8 per pass
+        d = e & 0xFF
+        c = e >> 8
+        up = jnp.where(idx >= 1, jnp.roll(c, 1, axis=-1), 0)
+        e = d + up
+    return e
+
+
+def _mul_batched_kernel(i_ref, j_ref, d_ref, f_ref, l_ref,
+                        u_ref, v_ref, o_ref):
+    """One grid step: BLOCK_B instances of pair (i, j) on diagonal d.
+
+    u_ref: (bb, 1, t) sub-digit tiles of u block i; v_ref likewise for
+    v block j; o_ref: (bb, 1, 3t) widened diagonal-d accumulator.  The
+    Toeplitz tiles never exist outside VMEM: they are rebuilt from
+    v_ref by `_toep_tile` each step (pure VPU shuffles, overlapped with
+    the MXU product of the previous step by the pipeline).
+    """
+    p = pl.program_id(1)
+    t = u_ref.shape[-1]
+    toep = _toep_tile(v_ref[:, 0, :])                     # (bb, t, 2t)
+    prod = jax.lax.dot_general(
+        u_ref[:, 0, :], toep,
+        dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=_I)                        # (bb, 2t)
+
+    @pl.when(f_ref[p] == 1)
+    def _init():
+        o_ref[:, 0, :] = jnp.zeros_like(o_ref[:, 0, :])
+        o_ref[:, 0, : 2 * t] = prod
+
+    @pl.when(f_ref[p] == 0)
+    def _acc():
+        o_ref[:, 0, : 2 * t] = o_ref[:, 0, : 2 * t] + prod
+
+    @pl.when(l_ref[p] == 1)
+    def _epilogue():
+        o_ref[:, 0, :] = _preresolve(o_ref[:, 0, :])
+
+
+def mul_pallas_batched(u: jax.Array, v: jax.Array, out_width: int,
+                       interpret: bool | None = None,
+                       block_b: int | None = None) -> jax.Array:
+    """Natively batched exact (u*v) mod B^out_width.
+
+    u: (batch, Wu), v: (batch, Wv) base-2^16 limb batches ->
+    (batch, out_width).  One instance group per leading grid row (the
+    paper's one-instance-per-CUDA-block schedule), Toeplitz tiles
+    staged in-kernel (no host-side (batch, nv, t, 2t) materialization),
+    per-diagonal carries pre-resolved in the kernel epilogue.  Pairs
+    whose diagonal cannot touch sub-digits < 2*out_width are pruned
+    from the schedule structurally, like `_mul_blocked`.
+
+    interpret defaults to True off-TPU (CPU validation mode).
+    """
+    if u.ndim != 2 or v.ndim != 2 or u.shape[0] != v.shape[0]:
+        raise ValueError(f"expected (batch, W) operands with equal batch, "
+                         f"got {u.shape} x {v.shape}")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    batch = u.shape[0]
+    t = BLOCK_T
+    wo8 = 2 * out_width
+    u8 = _to_u8digits(u.astype(_U))[:, :wo8]   # sub-digits >= wo8 can't matter
+    v8 = _to_u8digits(v.astype(_U))[:, :wo8]
+    nu = max(-(-u8.shape[1] // t), 1)
+    nv = max(-(-v8.shape[1] // t), 1)
+    # diagonal d's first output sub-digit is d*t; pruning bound as in
+    # mulmod_pallas (see its derivation)
+    d_keep = -(-wo8 // t)
+    nu_k = min(nu, d_keep)
+    nv_k = min(nv, d_keep)
+    u8 = u8[:, : nu_k * t]
+    v8 = v8[:, : nv_k * t]
+    u8 = jnp.pad(u8, ((0, 0), (0, nu_k * t - u8.shape[1])))
+    v8 = jnp.pad(v8, ((0, 0), (0, nv_k * t - v8.shape[1])))
+
+    bb = block_b or pick_block_b(batch)
+    bp = -(-batch // bb) * bb
+    if bp > batch:
+        u8 = jnp.pad(u8, ((0, bp - batch), (0, 0)))
+        v8 = jnp.pad(v8, ((0, bp - batch), (0, 0)))
+    u8b = u8.reshape(bp, nu_k, t).astype(_I)
+    v8b = v8.reshape(bp, nv_k, t).astype(_I)
+
+    i_idx, j_idx, d_idx, first, last = _pair_schedule_pruned(
+        nu_k, nv_k, d_keep)
+    ndiag = min(nu_k + nv_k - 1, d_keep)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=5,
+        grid=(bp // bb, len(i_idx)),
+        in_specs=[
+            pl.BlockSpec((bb, 1, t), lambda b, p, i, j, d, f, l: (b, i[p], 0)),
+            pl.BlockSpec((bb, 1, t), lambda b, p, i, j, d, f, l: (b, j[p], 0)),
+        ],
+        out_specs=pl.BlockSpec(
+            (bb, 1, 3 * t), lambda b, p, i, j, d, f, l: (b, d[p], 0)),
+    )
+    seg = pl.pallas_call(
+        _mul_batched_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((bp, ndiag, 3 * t), _I),
+        interpret=interpret,
+    )(jnp.asarray(i_idx), jnp.asarray(j_idx), jnp.asarray(d_idx),
+      jnp.asarray(first), jnp.asarray(last), u8b, v8b)
+
+    # overlap-add of the pre-resolved tiles: global position g receives
+    # the [0,t) lanes of tile g//t, the [t,2t) lanes of tile g//t - 1
+    # and the tail lanes of tile g//t - 2 -- each entry <= 2^8, so sums
+    # stay < 2^10 and the fixup needs only 2 local passes + one scan.
+    n8 = (ndiag + 2) * t
+    raw = jnp.zeros((bp, n8), _I)
+    raw = raw.at[:, : ndiag * t].add(seg[:, :, :t].reshape(bp, -1))
+    raw = raw.at[:, t: (ndiag + 1) * t].add(
+        seg[:, :, t: 2 * t].reshape(bp, -1))
+    raw = raw.at[:, 2 * t:].add(seg[:, :, 2 * t:].reshape(bp, -1))
+    raw = raw.astype(_U)
+
+    if n8 < wo8:
+        raw = jnp.pad(raw, ((0, 0), (0, wo8 - n8)))
+    else:
+        raw = raw[:, :wo8]
+    return _pack8(_resolve8(raw, passes=2))[:batch]

@@ -1,6 +1,6 @@
 """Jit-ready multiplication entry points with implementation dispatch.
 
-Three interchangeable implementations of the classical (quadratic)
+Four interchangeable implementations of the classical (quadratic)
 multi-precision product:
 
   * "scan"    -- digit-loop oracle (ref.py).  Exact, sequential, slow.
@@ -12,18 +12,36 @@ multi-precision product:
                  paper's register-tiled CUDA schedule: the MXU consumes
                  the Toeplitz tiles, carries are resolved afterwards by
                  one associative scan (base-2^8, 4 local passes).
-  * "pallas"  -- Pallas kernel with explicit VMEM BlockSpec tiling
-                 (kernels/bigmul.py), same math as "blocked".
+  * "pallas"  -- single-instance Pallas kernel with explicit VMEM
+                 BlockSpec tiling (kernels/bigmul.py), same math as
+                 "blocked"; batches via the generic vmap rule.
+  * "pallas_batched"
+              -- natively batched Pallas kernel (kernels/bigmul.py,
+                 `mul_pallas_batched`): the batch is a leading grid
+                 axis (one instance per grid row, the paper's
+                 one-instance-per-CUDA-block schedule), Toeplitz tiles
+                 are staged *inside* the kernel from the raw sub-digit
+                 operand block (no host-side (nv, t, 2t) gather), and
+                 carry pre-resolution is fused into the kernel epilogue
+                 so only a short 2-pass + associative-scan fixup
+                 remains in XLA.  `mul` under `jax.vmap` routes whole
+                 batches to this kernel through a `custom_vmap` rule,
+                 so `divmod_batch` / `barrett_reduce` / the windowed
+                 Refine pay one kernel launch per product, not one per
+                 batch lane.
 
-All are exact and validated against each other in tests.  Default is
-"blocked" (fast on CPU as well as the dry-run target).
+All are exact and validated against each other in tests.  Default
+dispatch: "pallas_batched" on TPU, "blocked" elsewhere (fast on CPU,
+where Pallas runs in interpret mode); `set_default_impl` overrides.
 """
 
 from __future__ import annotations
 
+import functools
 from functools import partial
 
 import jax
+import jax.custom_batching
 import jax.numpy as jnp
 
 from repro.core.bigint import LOG_BASE, MASK
@@ -38,12 +56,25 @@ _I = jnp.int32
 # anti-diagonal accumulation well inside int32.
 BLOCK_T = 128
 
-DEFAULT_IMPL = "blocked"
+IMPLS = ("scan", "blocked", "pallas", "pallas_batched")
+
+# Resolved lazily so importing this module never forces backend init;
+# None means "pallas_batched on TPU, blocked elsewhere".
+DEFAULT_IMPL: str | None = None
+
+
+def default_impl() -> str:
+    global DEFAULT_IMPL
+    if DEFAULT_IMPL is None:
+        DEFAULT_IMPL = ("pallas_batched"
+                        if jax.default_backend() == "tpu" else "blocked")
+    return DEFAULT_IMPL
 
 
 def set_default_impl(name: str) -> None:
     global DEFAULT_IMPL
-    assert name in ("scan", "blocked", "pallas")
+    if name not in IMPLS:
+        raise ValueError(f"unknown impl {name!r}; expected one of {IMPLS}")
     DEFAULT_IMPL = name
 
 
@@ -52,22 +83,29 @@ def set_default_impl(name: str) -> None:
 # ---------------------------------------------------------------------------
 
 def _to_u8digits(u: jax.Array) -> jax.Array:
-    """(W,) base-2^16 limbs -> (2W,) base-2^8 sub-digits (still uint32)."""
+    """(..., W) base-2^16 limbs -> (..., 2W) base-2^8 sub-digits
+    (still uint32).  Operates on the last axis."""
     lo = u & _U(0xFF)
     hi = (u >> 8) & _U(0xFF)
-    return jnp.stack([lo, hi], axis=-1).reshape(-1)
+    return jnp.stack([lo, hi], axis=-1).reshape(u.shape[:-1] + (-1,))
 
 
-def _resolve8(raw: jax.Array) -> jax.Array:
-    """Canonicalize base-2^8 raw sums (< 2^31) to sub-digits < 2^8."""
-    idx = jnp.arange(raw.shape[0], dtype=_I)
+def _resolve8(raw: jax.Array, passes: int = 4) -> jax.Array:
+    """Canonicalize base-2^8 raw sums to sub-digits < 2^8 (last axis).
+
+    `passes` local split passes shrink the carry magnitude by 2^8 each
+    before the (generate, propagate) scan finishes: raw sums < 2^31
+    need the default 4; kernel-pre-resolved sums (< 2^10, see
+    bigmul.mul_pallas_batched) need only 2.
+    """
+    idx = jnp.arange(raw.shape[-1], dtype=_I)
 
     def shift1(c):
-        r = jnp.roll(c, 1)
+        r = jnp.roll(c, 1, axis=-1)
         return jnp.where(idx >= 1, r, _U(0))
 
     e = raw
-    for _ in range(4):                      # carry magnitude /2^8 per pass
+    for _ in range(passes):                 # carry magnitude /2^8 per pass
         d = e & _U(0xFF)
         c = e >> 8
         e = d + shift1(c)
@@ -78,15 +116,16 @@ def _resolve8(raw: jax.Array) -> jax.Array:
         ga, pa = a
         gb, pb = b
         return gb | (pb & ga), pa & pb
-    g, _ = jax.lax.associative_scan(op, (gen, prop))
-    carry = jnp.concatenate([jnp.zeros((1,), _I), g[:-1]]).astype(_U)
+    g, _ = jax.lax.associative_scan(op, (gen, prop), axis=-1)
+    carry = jnp.concatenate(
+        [jnp.zeros(g.shape[:-1] + (1,), _I), g[..., :-1]], axis=-1).astype(_U)
     return (e + carry) & _U(0xFF)
 
 
 def _pack8(d8: jax.Array) -> jax.Array:
-    """(2W,) base-2^8 digits -> (W,) base-2^16 limbs."""
-    pairs = d8.reshape(-1, 2)
-    return pairs[:, 0] | (pairs[:, 1] << 8)
+    """(..., 2W) base-2^8 digits -> (..., W) base-2^16 limbs."""
+    pairs = d8.reshape(d8.shape[:-1] + (-1, 2))
+    return pairs[..., 0] | (pairs[..., 1] << 8)
 
 
 # ---------------------------------------------------------------------------
@@ -160,11 +199,38 @@ def _mul_blocked(u: jax.Array, v: jax.Array, out_width: int) -> jax.Array:
 # public entry points
 # ---------------------------------------------------------------------------
 
+@functools.lru_cache(maxsize=None)
+def _mul_pallas_batched_cv(out_width: int):
+    """custom_vmap wrapper: single instances take the batch-of-1 path;
+    `jax.vmap` hands the WHOLE batch to the natively batched kernel in
+    one launch (batch = leading grid axis) instead of adding a lane per
+    instance.  Cached per static out_width so repeated traces reuse one
+    wrapper (and its vmap rule)."""
+    from . import bigmul
+
+    @jax.custom_batching.custom_vmap
+    def _mul_pb(u, v):
+        return bigmul.mul_pallas_batched(u[None, :], v[None, :],
+                                         out_width)[0]
+
+    @_mul_pb.def_vmap
+    def _mul_pb_vmap(axis_size, in_batched, u, v):
+        ub, vb = in_batched
+        if not ub:
+            u = jnp.broadcast_to(u, (axis_size,) + u.shape)
+        if not vb:
+            v = jnp.broadcast_to(v, (axis_size,) + v.shape)
+        return bigmul.mul_pallas_batched(u, v, out_width), True
+
+    return _mul_pb
+
+
 def mul(u: jax.Array, v: jax.Array, out_width: int,
         impl: str | None = None) -> jax.Array:
     """Exact u*v truncated (mod) to out_width limbs. Single instance;
-    vmap for batches."""
-    impl = impl or DEFAULT_IMPL
+    vmap for batches ("pallas_batched" routes whole vmapped batches to
+    one natively batched kernel launch)."""
+    impl = impl or default_impl()
     if impl == "scan":
         return _ref.mul_ref(u, v, out_width)
     if impl == "blocked":
@@ -172,7 +238,23 @@ def mul(u: jax.Array, v: jax.Array, out_width: int,
     if impl == "pallas":
         from . import bigmul
         return bigmul.mul_pallas(u, v, out_width)
-    raise ValueError(f"unknown impl {impl!r}")
+    if impl == "pallas_batched":
+        return _mul_pallas_batched_cv(out_width)(u, v)
+    raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
+
+
+def mul_batch(u: jax.Array, v: jax.Array, out_width: int,
+              impl: str | None = None) -> jax.Array:
+    """Batched product: u, v (batch, W) -> (batch, out_width).
+
+    "pallas_batched" dispatches the batch natively (one kernel launch,
+    batch as the leading grid axis); other impls fall back to vmap.
+    """
+    impl = impl or default_impl()
+    if impl == "pallas_batched":
+        from . import bigmul
+        return bigmul.mul_pallas_batched(u, v, out_width)
+    return jax.vmap(lambda a, b: mul(a, b, out_width, impl=impl))(u, v)
 
 
 def mulmod(u: jax.Array, v: jax.Array, L, out_width: int,
@@ -184,3 +266,8 @@ def mulmod(u: jax.Array, v: jax.Array, L, out_width: int,
 @partial(jax.jit, static_argnames=("out_width", "impl"))
 def mul_jit(u, v, out_width: int, impl: str | None = None):
     return mul(u, v, out_width, impl=impl)
+
+
+@partial(jax.jit, static_argnames=("out_width", "impl"))
+def mul_batch_jit(u, v, out_width: int, impl: str | None = None):
+    return mul_batch(u, v, out_width, impl=impl)

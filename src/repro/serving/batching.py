@@ -6,12 +6,50 @@ int lists of arbitrary length, get padded to one of a fixed set of
 compiled batch-bucket sizes (one executable per bucket), optionally
 sharded across a device mesh on the batch axis, and the results are
 trimmed back to the true request size.  This module owns that pattern.
+
+`kernel_plan` extends bucket planning down into the kernel: for each
+(batch bucket, operand precision) pair it reports the multiplication
+impl and the grid shape the natively batched Pallas kernel will launch
+(instances per grid step x scheduled block pairs), mirroring
+`kernels.bigmul.pick_block_b` / `_pair_schedule_pruned` so services
+can record and expose their per-bucket kernel geometry.
 """
 
 from __future__ import annotations
 
+from typing import NamedTuple
+
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class KernelPlan(NamedTuple):
+    """Kernel geometry for one (bucket, precision) pair."""
+    impl: str          # resolved multiplication impl
+    block_b: int       # instances per grid step (1 unless pallas_batched)
+    grid_rows: int     # leading (batch) grid rows per launch
+    grid_pairs: int    # scheduled (i, j) block pairs of the dominant
+                       # full-width product at this precision
+
+
+def kernel_plan(bucket: int, w_limbs: int,
+                impl: str | None = None) -> KernelPlan:
+    """Plan the kernel grid for `bucket` instances of `w_limbs`-limb
+    operands (the service's widest internal product).
+
+    Single source of truth is the kernel itself: block_b comes from
+    `bigmul.pick_block_b`, the pair count from the same ceil-division
+    blocking the kernel schedule uses, so the plan is exactly what a
+    launch at this (bucket, precision) will execute.
+    """
+    from repro.kernels import ops as K
+    from repro.kernels import bigmul
+    impl = impl or K.default_impl()
+    nb = max(-(-2 * w_limbs // K.BLOCK_T), 1)    # sub-digit blocks/operand
+    if impl == "pallas_batched":
+        bb = bigmul.pick_block_b(bucket)
+        return KernelPlan(impl, bb, -(-bucket // bb), nb * nb)
+    return KernelPlan(impl, 1, bucket, nb * nb)
 
 
 class Batcher:

@@ -29,15 +29,23 @@ class BigintDivisionService:
         self.impl = impl
         self.batcher = BT.Batcher(batch_buckets)
         self._fns = BT.CompiledBuckets()
+        # per-bucket kernel geometry, recorded when the bucket compiles
+        self.kernel_plans: dict[int, BT.KernelPlan] = {}
 
     @property
     def buckets(self):
         return list(self.batcher.buckets)
 
     def _fn(self, bucket: int):
-        return self._fns.get(bucket, lambda: BT.sharded_jit(
-            partial(S.divmod_batch, impl=self.impl), self.mesh,
-            batched_argnums=(0, 1), n_args=2, n_out=2))
+        def build():
+            # plan against the widest internal product: divmod pads to
+            # m + PAD limbs and forms the double-width u * shinv there
+            plan = BT.kernel_plan(bucket, self.m + S.PAD, self.impl)
+            self.kernel_plans[bucket] = plan
+            return BT.sharded_jit(
+                partial(S.divmod_batch, impl=plan.impl), self.mesh,
+                batched_argnums=(0, 1), n_args=2, n_out=2)
+        return self._fns.get(bucket, build)
 
     def divide(self, us: list[int], vs: list[int]):
         """Exact (q, r) lists for batched u/v (v > 0)."""

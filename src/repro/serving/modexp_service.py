@@ -30,7 +30,8 @@ class ModArithService:
 
     m_limbs:    storage width of moduli/residues (values < B^m_limbs)
     e_limbs:    storage width of modexp exponents (default m_limbs)
-    impl:       multiplication kernel ("scan" | "blocked" | "pallas")
+    impl:       multiplication kernel ("scan" | "blocked" | "pallas" |
+                "pallas_batched"; None = backend default)
     windowed:   size-bucketed Newton refinement in the precompute
     window_bits: modexp ladder window (must divide 16)
     max_cached_moduli: LRU bound on device-resident contexts
@@ -49,6 +50,8 @@ class ModArithService:
         self.window_bits = window_bits
         self.batcher = BT.Batcher(batch_buckets)
         self._fns = BT.CompiledBuckets()
+        # per-bucket kernel geometry, recorded when the bucket compiles
+        self.kernel_plans: dict[int, BT.KernelPlan] = {}
         self._ctxs: OrderedDict[int, MA.BarrettContext] = OrderedDict()
         self.max_cached = max_cached_moduli
         self.ctx_hits = 0
@@ -79,7 +82,11 @@ class ModArithService:
 
     def _fn(self, op: str, bucket: int):
         def build():
-            impl = self.impl
+            # widest internal product: x * mu at the Barrett working width
+            plan = BT.kernel_plan(bucket, MA.barrett_width(self.m),
+                                  self.impl)
+            self.kernel_plans[bucket] = plan
+            impl = plan.impl
             if op == "reduce":
                 f = partial(MA.reduce_shared, impl=impl)
                 batched = (1,)

@@ -77,7 +77,7 @@ def test_resolve_carries_adversarial():
 # multiplication: all impls vs exact ints, shape/dtype sweep
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("impl", ["scan", "blocked", "pallas"])
+@pytest.mark.parametrize("impl", list(ops.IMPLS))
 @pytest.mark.parametrize("wu,wv", [(2, 2), (7, 3), (16, 16), (40, 24),
                                    (129, 65), (256, 256)])
 def test_mul_impls(impl, wu, wv):
@@ -91,7 +91,7 @@ def test_mul_impls(impl, wu, wv):
         assert got == a * b, (impl, wu, wv)
 
 
-@pytest.mark.parametrize("impl", ["scan", "blocked", "pallas"])
+@pytest.mark.parametrize("impl", list(ops.IMPLS))
 def test_mul_truncation(impl):
     a = B ** 30 - 12345
     b = B ** 25 - 6789
@@ -111,7 +111,7 @@ def test_mul_blocked_vs_scan_property(a, b):
 
 
 def test_mul_extremes():
-    for impl in ("scan", "blocked", "pallas"):
+    for impl in ops.IMPLS:
         w = 64
         a = B ** w - 1
         got = bi.to_int(ops.mul_jit(_as_limbs(a, w), _as_limbs(a, w),
@@ -164,5 +164,142 @@ def test_divmod_with_pallas_mul():
     q, r = S.divmod_batch(jnp.asarray(bi.batch_from_ints(us, m)),
                           jnp.asarray(bi.batch_from_ints(vs, m)),
                           impl="pallas")
+    for u, v, qq, rr in zip(us, vs, bi.batch_to_ints(q), bi.batch_to_ints(r)):
+        assert (qq, rr) == divmod(u, v)
+
+
+# ---------------------------------------------------------------------------
+# natively batched kernel
+# ---------------------------------------------------------------------------
+
+def test_impl_registry_and_default_validation():
+    assert "pallas_batched" in ops.IMPLS
+    with pytest.raises(ValueError):
+        ops.set_default_impl("nope")
+    before = ops.DEFAULT_IMPL
+    try:
+        for name in ops.IMPLS:
+            ops.set_default_impl(name)        # every registered name OK
+            assert ops.default_impl() == name
+    finally:
+        ops.DEFAULT_IMPL = before
+
+
+def test_pick_block_b():
+    # power-of-two block minimizing padded instance-steps
+    assert bigmul.pick_block_b(1) == 1
+    assert bigmul.pick_block_b(16) == 16
+    assert bigmul.pick_block_b(24) == 8       # 24 pads to 32 under bb=16
+    assert bigmul.pick_block_b(64) == 16
+    for batch in range(1, 40):
+        bb = bigmul.pick_block_b(batch)
+        assert bb in (1, 2, 4, 8, 16)
+        padded = -(-batch // bb) * bb
+        assert padded < batch + bb            # never a full wasted block
+
+
+@pytest.mark.parametrize("batch", [1, 3, 16])
+def test_mul_pallas_batched_native(batch):
+    """Direct batched entry: mixed magnitudes, batch padding to the
+    block size, exactness vs Python ints."""
+    rnd = random.Random(batch)
+    wu, wv = 20, 18
+    xs = [0, 1, B ** wu - 1] + [rnd.randint(0, B ** wu - 1)
+                                for _ in range(batch)]
+    ys = [B ** wv - 1, 0, B ** wv - 1] + [rnd.randint(0, B ** wv - 1)
+                                          for _ in range(batch)]
+    r = bigmul.mul_pallas_batched(
+        jnp.asarray(bi.batch_from_ints(xs, wu)),
+        jnp.asarray(bi.batch_from_ints(ys, wv)), wu + wv)
+    for x, y, row in zip(xs, ys, np.asarray(r)):
+        assert bi.to_int(row) == x * y
+
+
+def test_mul_batch_entry_cross_impl():
+    """ops.mul_batch: natively batched result == vmapped blocked/scan."""
+    rnd = random.Random(77)
+    w = 24
+    xs = [rnd.randint(0, B ** w - 1) for _ in range(5)]
+    ys = [rnd.randint(0, B ** w - 1) for _ in range(5)]
+    u = jnp.asarray(bi.batch_from_ints(xs, w))
+    v = jnp.asarray(bi.batch_from_ints(ys, w))
+    rb = ops.mul_batch_jit(u, v, 2 * w, "pallas_batched")
+    for other in ("blocked", "scan"):
+        ro = ops.mul_batch_jit(u, v, 2 * w, other)
+        np.testing.assert_array_equal(np.asarray(rb), np.asarray(ro))
+
+
+@pytest.mark.parametrize("wo", [63, 64, 65, 128])
+def test_mul_batched_truncation_edges(wo):
+    """out_width at/around the diagonal-pruning block boundaries
+    (BLOCK_T // 2 = 64 limbs): batched kernel vs exact ints mod B^wo."""
+    rnd = random.Random(wo)
+    wu = wv = 130
+    xs = [rnd.randint(0, B ** wu - 1) for _ in range(2)] + [B ** wu - 1]
+    ys = [rnd.randint(0, B ** wv - 1) for _ in range(2)] + [B ** wv - 1]
+    r = bigmul.mul_pallas_batched(
+        jnp.asarray(bi.batch_from_ints(xs, wu)),
+        jnp.asarray(bi.batch_from_ints(ys, wv)), wo)
+    for x, y, row in zip(xs, ys, np.asarray(r)):
+        assert bi.to_int(row) == (x * y) % B ** wo, (wo, x, y)
+
+
+def test_custom_vmap_unbatched_operand():
+    """vmap with one operand closed over (the Barrett mu pattern):
+    the custom_vmap rule broadcasts it before the batched launch."""
+    rnd = random.Random(5)
+    w = 12
+    shared = rnd.randint(0, B ** w - 1)
+    xs = [rnd.randint(0, B ** w - 1) for _ in range(4)]
+    vs_ = jnp.asarray(bi.from_int(shared, w))
+    f = jax.jit(jax.vmap(
+        lambda u: ops.mul(u, vs_, 2 * w, impl="pallas_batched")))
+    r = f(jnp.asarray(bi.batch_from_ints(xs, w)))
+    for x, row in zip(xs, np.asarray(r)):
+        assert bi.to_int(row) == x * shared
+
+
+def test_mulmod_diagonal_keep_boundaries():
+    """Satellite: the close-product pruning bound d_keep =
+    ceil(2*l_max / t) is exact -- property-check l_max at and around
+    multiples of BLOCK_T // 2 limbs (the block-boundary cases) against
+    the digit-scan oracle."""
+    rnd = random.Random(64)
+    t2 = bigmul.BLOCK_T // 2          # 64 limbs per block diagonal step
+    wu, wv = 3 * t2 + 5, 2 * t2 + 3
+    for l_max in (1, t2 - 1, t2, t2 + 1, 2 * t2 - 1, 2 * t2, 2 * t2 + 1,
+                  3 * t2):
+        a = rnd.randint(B ** (wu - 1), B ** wu - 1)
+        b = rnd.randint(B ** (wv - 1), B ** wv - 1)
+        got = bi.to_int(bigmul.mulmod_pallas(_as_limbs(a, wu),
+                                             _as_limbs(b, wv), l_max,
+                                             wu + 2))
+        ref_ = bi.to_int(ref.mulmod_ref(_as_limbs(a, wu), _as_limbs(b, wv),
+                                        l_max, wu + 2))
+        assert got == ref_ == (a * b) % B ** l_max, l_max
+
+
+def test_mulmod_keep_all_ones():
+    """Worst-case carry chains across the pruning boundary: operands of
+    all-0xFFFF limbs, l_max exactly at block edges."""
+    t2 = bigmul.BLOCK_T // 2
+    wu = 2 * t2 + 2
+    a = B ** wu - 1
+    for l_max in (t2, 2 * t2):
+        got = bi.to_int(bigmul.mulmod_pallas(_as_limbs(a, wu),
+                                             _as_limbs(a, wu), l_max,
+                                             wu + 2))
+        assert got == (a * a) % B ** l_max, l_max
+
+
+def test_divmod_with_pallas_batched_mul():
+    from repro.core import shinv as S
+    rnd = random.Random(29)
+    m = 8
+    us = [rnd.randint(0, B ** m - 1) for _ in range(4)]
+    vs = [rnd.randint(1, B ** (m // 2) - 1) for _ in range(4)]
+    q, r = S.divmod_batch(jnp.asarray(bi.batch_from_ints(us, m)),
+                          jnp.asarray(bi.batch_from_ints(vs, m)),
+                          impl="pallas_batched")
     for u, v, qq, rr in zip(us, vs, bi.batch_to_ints(q), bi.batch_to_ints(r)):
         assert (qq, rr) == divmod(u, v)

@@ -95,6 +95,23 @@ def test_modmul_random(m):
         assert got == (a * b) % v, (m, v, a, b)
 
 
+def test_modmul_batch_pallas_batched():
+    """impl dispatch to the natively batched kernel: the shared-context
+    vmap hands whole batches to one launch (custom_vmap rule)."""
+    rnd = random.Random(51)
+    m = 4
+    v = rnd.randint(B ** (m - 1), B ** m - 1)
+    ctx = _ctx(v, m, impl="pallas_batched")
+    aa = [rnd.randint(0, B ** m - 1) for _ in range(4)]
+    bb = [rnd.randint(0, B ** m - 1) for _ in range(4)]
+    out = MA.modmul_shared_batch(ctx,
+                                 jnp.asarray(bi.batch_from_ints(aa, m)),
+                                 jnp.asarray(bi.batch_from_ints(bb, m)),
+                                 impl="pallas_batched")
+    for a, b, o in zip(aa, bb, bi.batch_to_ints(out)):
+        assert o == (a * b) % v
+
+
 @pytest.mark.parametrize("impl", ["scan", "blocked"])
 @pytest.mark.parametrize("m", [4, 16])          # 64 / 256 bits
 def test_modexp_vs_pow(impl, m):

@@ -1,0 +1,82 @@
+"""windowed=True (size-bucketed Refine) vs windowed=False (full-width)
+`divmod_fixed` equivalence.
+
+The windowed path is the JAX analogue of the paper's statically
+specialized variable-size multiplications (effMul<BLOCK, Q>); it must
+be bit-identical to the full-width path on every input, including the
+special-case branches of `shinv_fixed` (single-limb lift, v == B^k).
+"""
+
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from _hyp import given, settings, st
+
+from repro.core import bigint as bi, shinv as S
+
+B = bi.BASE
+
+
+def _both(us, vs, m, impl=None):
+    u = jnp.asarray(bi.batch_from_ints(us, m))
+    v = jnp.asarray(bi.batch_from_ints(vs, m))
+    qw, rw = S.divmod_batch(u, v, impl=impl, windowed=True)
+    qf, rf = S.divmod_batch(u, v, impl=impl, windowed=False)
+    np.testing.assert_array_equal(np.asarray(qw), np.asarray(qf))
+    np.testing.assert_array_equal(np.asarray(rw), np.asarray(rf))
+    for uu, vv, qq, rr in zip(us, vs, bi.batch_to_ints(qw),
+                              bi.batch_to_ints(rw)):
+        assert (qq, rr) == divmod(uu, vv), (uu, vv)
+
+
+@pytest.mark.parametrize("m", [4, 8, 16])
+def test_windowed_equivalence_random_precisions(m):
+    """prec(v) spanning 1 limb to M/2 (the benchmark regime), prec(u)
+    spanning the full storage width."""
+    rnd = random.Random(m * 31)
+    us, vs = [], []
+    for _ in range(24):
+        ku = rnd.randint(1, m)
+        us.append(rnd.randint(0, B ** ku - 1))
+        kv = rnd.randint(1, max(m // 2, 1))
+        vs.append(rnd.randint(max(B ** (kv - 1), 1), B ** kv - 1))
+    _both(us, vs, m)
+
+
+def test_windowed_equivalence_single_limb_lift():
+    """prec(v) == 1 triggers the shinv single-limb lift
+    (floor(B^(h+1) / vB) == floor(B^h / v))."""
+    rnd = random.Random(3)
+    m = 12
+    vs = [1, 2, 3, B - 1, B // 2, 7, 11, 255]
+    us = [rnd.randint(0, B ** m - 1) for _ in vs]
+    _both(us, vs, m)
+
+
+def test_windowed_equivalence_power_moduli():
+    """v == B^k hits the case_pow branch: shinv is exactly B^(h-k)."""
+    rnd = random.Random(9)
+    m = 12
+    vs = [B ** k for k in range(0, m // 2)]
+    us = [rnd.randint(0, B ** m - 1) for _ in vs]
+    _both(us, vs, m)
+
+
+def test_windowed_equivalence_edges():
+    us, vs = [], []
+    for u in [0, 1, B - 1, B, B ** 3 - 1, B ** 6 - 1]:
+        for v in [1, 2, B - 1, B, B + 1, B ** 2, B ** 3 - 1]:
+            us.append(u), vs.append(v)
+    _both(us, vs, 8)
+
+
+@given(st.data())
+@settings(max_examples=25, deadline=None)
+def test_windowed_equivalence_property(data):
+    m = data.draw(st.sampled_from([4, 8]))
+    u = data.draw(st.integers(0, B ** m - 1))
+    kv = data.draw(st.integers(1, max(m // 2, 1)))
+    v = data.draw(st.integers(1, B ** kv - 1))
+    _both([u], [v], m)
