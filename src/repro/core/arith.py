@@ -46,15 +46,33 @@ def shift(u: jax.Array, n) -> jax.Array:
     return jnp.where((src >= 0) & (src < m), rolled, _U(0))
 
 
+def carry_op(a, b):
+    """Associative combine of (generate, propagate) carry pairs; `a` is
+    the less significant operand.  Identity element: (0, 1)."""
+    ga, pa = a
+    gb, pb = b
+    return gb | (pb & ga), pa & pb
+
+
+def carry_scan(gen: jax.Array, prop: jax.Array, axis: int = -1) -> jax.Array:
+    """Exclusive scan of (generate, propagate) carry pairs -> carry-in.
+
+    THE carry-resolution core shared by every base: the base-2^16 limb
+    add/sub/resolve here and the base-2^8 sub-digit fixup in
+    kernels/ops.py (`_resolve8`) both finish with this scan.  Works on
+    any axis for batched (..., n) inputs.
+    """
+    g, _ = jax.lax.associative_scan(carry_op, (gen, prop), axis=axis)
+    # exclusive: carry into position i is the inclusive result at i-1
+    g = jnp.moveaxis(g, axis, -1)
+    g = jnp.concatenate(
+        [jnp.zeros(g.shape[:-1] + (1,), g.dtype), g[..., :-1]], axis=-1)
+    return jnp.moveaxis(g, -1, axis)
+
+
 def _carry_scan(gen: jax.Array, prop: jax.Array) -> jax.Array:
-    """Exclusive scan of (generate, propagate) carry pairs -> carry-in."""
-    def op(a, b):
-        ga, pa = a
-        gb, pb = b
-        return gb | (pb & ga), pa & pb
-    g, _ = jax.lax.associative_scan(op, (gen, prop))
-    # exclusive: carry into limb i is the inclusive result at i-1
-    return jnp.concatenate([jnp.zeros((1,), g.dtype), g[:-1]])
+    """1-D alias of `carry_scan` (the historical internal name)."""
+    return carry_scan(gen, prop, axis=-1)
 
 
 def add(u: jax.Array, v: jax.Array) -> jax.Array:

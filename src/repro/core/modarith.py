@@ -37,13 +37,16 @@ JAX adaptation notes (mirroring shinv.py):
     exponent a limb vector; per-instance variation is handled by the
     table select, so it traces at static shape and vmaps cleanly.
 
-`impl` selects the multiplication kernel ("scan" | "blocked" |
-"pallas" | "pallas_batched"), `windowed` the size-bucketed Newton
-refinement -- both threaded through exactly like `shinv.divmod_batch`.
-With "pallas_batched" (the TPU default) `K.mul` is batch-aware: the
-vmapped `reduce_shared` / `modmul_shared` / `modexp_shared` hot paths
-execute each truncated multiplication as one natively batched kernel
-launch across the whole request batch.
+`impl` selects the kernel path ("scan" | "blocked" | "pallas" |
+"pallas_batched" | "pallas_fused"), `windowed` the size-bucketed
+Newton refinement -- both threaded through exactly like
+`shinv.divmod_batch`.  With "pallas_batched" `K.mul` is batch-aware:
+the vmapped `reduce_shared` / `modmul_shared` / `modexp_shared` hot
+paths execute each truncated multiplication as one natively batched
+kernel launch across the whole request batch.  With "pallas_fused"
+(the TPU default) the whole `barrett_reduce` core -- both truncated
+products AND the conditional subtracts -- is ONE batched launch
+(`K.fused_barrett`, kernels/fused.py).
 """
 
 from __future__ import annotations
@@ -110,7 +113,13 @@ def barrett_reduce(ctx: BarrettContext, x: jax.Array,
                    *, impl: str | None = None) -> jax.Array:
     """x mod v for any x < B^(2m), as (m,) limbs.  Two truncated
     multiplications; exactness is guaranteed by the qhat error bound
-    (asserted against divmod_fixed in tests)."""
+    (asserted against divmod_fixed in tests).
+
+    The reduction core (qhat = floor(x*mu / B^h), q*v, the conditional
+    add-back/subtract) runs through `K.fused_barrett`: ONE batched
+    Pallas launch under impl="pallas_fused" (h is static, so the shift
+    compiles into the kernel), the reference composition elsewhere.
+    """
     m = ctx.m
     if x.shape[0] > 2 * m:
         raise ValueError(f"x has {x.shape[0]} limbs; reduce handles <= {2*m}")
@@ -118,21 +127,11 @@ def barrett_reduce(ctx: BarrettContext, x: jax.Array,
     h = barrett_h(m)
     xw = _pad_to(x, W)
     vw = _pad_to(ctx.v, W)
-
-    # qhat = floor(x * mu / B^h): the high part of the first product.
-    # True x*mu < B^(2m + h + 1) <= B^(2W), so nothing needed is cut.
-    p = K.mul(xw, ctx.mu, 2 * W, impl=impl)
-    q = A.shift(p, -h)[:W]
-    # q*v <= x + v < B^W: the second product truncates safely to W.
-    qv = K.mul(q, vw, W, impl=impl)
-
-    # qhat in {q-1, q, q+1}: one conditional add-back, one conditional
-    # subtract.
-    over = A.lt(xw, qv)                       # qhat = q+1
-    qv = jnp.where(over, A.sub(qv, vw), qv)
-    r = A.sub(xw, qv)
-    under = A.ge(r, vw)                       # qhat = q-1
-    r = jnp.where(under, A.sub(r, vw), r)
+    # x*mu < B^(2m + h + 1) <= B^(2W), so the first product's 2W-limb
+    # truncation cuts nothing needed; q*v <= x + v < B^W fits the
+    # second; qhat in {q-1, q, q+1} makes the correction two
+    # conditional subtracts.
+    r = K.fused_barrett(xw, ctx.mu, vw, h=h, impl=impl)
     return r[:m]
 
 

@@ -21,13 +21,27 @@ JAX adaptation notes (vs. the CUDA implementation in the paper):
     uint32 (no 64-bit hardware integers on TPU): one wrap-around 32/32
     division plus a 16-step restoring division, all vectorizable.
   * Multiplications dispatch through `K.mul`, which is batch-aware:
-    with `impl="pallas_batched"` (the TPU default) a `custom_vmap`
-    rule hands each whole vmapped batch to the natively batched Pallas
-    kernel -- `divmod_batch` and every windowed Refine product launch
-    one kernel per multiplication, not one per batch lane.
+    with `impl="pallas_batched"` a `custom_vmap` rule hands each whole
+    vmapped batch to the natively batched Pallas kernel --
+    `divmod_batch` and every windowed Refine product launch one kernel
+    per multiplication, not one per batch lane.
+  * The per-iteration arithmetic itself lives behind the fused
+    division-step registry (`K.fused_step` / `K.fused_correct`,
+    kernels/fused.py): with `impl="pallas_fused"` (the TPU default)
+    one Refine iteration compiles to TWO batched Pallas launches with
+    all glue (carry scans, shifts, prec, PowDiff select, floor
+    correction) executed in-kernel, and the divmod finalization to
+    ONE; other impls run the reference composition (K.mul products +
+    arith glue in XLA, ~15 full-width ops per step).  Both paths are
+    bit-identical (tests/test_fused.py).
 
 Sign handling and the delta in {-1,0,+1} quotient correction follow the
 paper's revised Theorem 2.
+
+Zero-divisor contract: division by zero is defined as the total
+extension divmod(u, 0) = (0, u), and shinv_fixed(0, h) = 0.  See
+`_initial_w0` for how the v == 0 lane is masked through the traced
+(branch-free) refinement.
 """
 
 from __future__ import annotations
@@ -49,11 +63,27 @@ GUARD = 2   # guard digits g (paper: Refine line 16)
 PAD = 8     # extra limbs of internal headroom above M
 
 
+def refine_iters(m_limbs: int) -> int:
+    """Static Refine trip count for an m-limb division (the paper's
+    fixed-count formulation, Algorithm 1 line 19).  Single source of
+    truth -- benchmarks/div_breakdown.py and tests derive their
+    launch-count contracts (2 launches * this + 1) from it."""
+    return math.ceil(math.log2(max(m_limbs, 2))) + 2
+
+
 def _initial_w0(V: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Exact floor(B^3 / V) for V in [B, B^2), as three base-B limbs.
 
     q1 = floor(2^32 / V) via wrap-around uint32 division;
     q2 = floor((2^32 mod V) * 2^16 / V) via 16-step restoring division.
+
+    The `maximum(V, 1)` below is NOT silent zero-divisor handling: it
+    only keeps the traced uint32 division well-defined on the v == 0
+    lane of a batch (integer division by zero is backend-dependent in
+    XLA).  The seed it produces there is garbage by design --
+    `shinv_fixed` masks the v == 0 lane to the documented result 0
+    after refinement, and `divmod_fixed` maps it to (q, r) = (0, u)
+    (see the module docstring; asserted in tests/test_fused.py).
     """
     V = jnp.maximum(V, _U(1))
     q1 = (_U(0) - V) // V + _U(1)            # floor(2^32 / V), exact
@@ -70,56 +100,6 @@ def _initial_w0(V: jax.Array) -> tuple[jax.Array, jax.Array, jax.Array]:
     return q2 & _U(MASK), q1 & _U(MASK), q1 >> LOG_BASE
 
 
-def _powdiff(v, w, h, l, *, width, impl):
-    """(sign, x = |B^h - v*w|) per Algorithm 2.  v, w: (width,) limbs.
-
-    One full product serves both the full and the close branch (the
-    close product only saves work at the kernel level; the Pallas
-    mulmod kernel skips high blocks when the static window allows it).
-    """
-    w2 = 2 * width
-    pv, pw = A.prec(v), A.prec(w)
-    L = pv + pw - l + 1
-    p = K.mul(v, w, w2, impl=impl)
-
-    full = A.is_zero(v) | A.is_zero(w) | (L >= h)
-    # ---- full branch: compare p with B^h
-    sign_full = A.prec(p) <= h               # p < B^h  (p == B^h -> mag 0)
-    mag_pos = A.neg_mod_pow(p, h)[:width]    # B^h - p   (needs p < B^h)
-    mag_neg = A.sub_pow(p, h)[:width]        # p - B^h   (Listing 1.3)
-    x_full = jnp.where(sign_full, mag_pos, mag_neg)
-    x_full = jnp.where(A.is_zero(v) | A.is_zero(w),
-                       one_hot_pow(h, width), x_full)   # |B^h - 0|
-    # ---- close branch: P = (v*w) mod B^L, sign from top digit of P
-    P = A.mask_below(p, L)[:width]
-    p_zero = A.is_zero(P)
-    p_top = A.take_limb(P, L - 1)
-    sign_close = p_zero | (p_top != 0)
-    x_close = jnp.where(p_zero, jnp.zeros((width,), _U),
-                        jnp.where(p_top == 0, P, A.neg_mod_pow(P, L)[:width]))
-
-    sign = jnp.where(full, sign_full, sign_close)
-    x = jnp.where(full, x_full, x_close)
-    return sign, x
-
-
-def _step(h, v, w, m, l, g, *, width, impl):
-    """One Newton iteration (Algorithm 1, Step), floor-exact."""
-    w2 = 2 * width
-    sign, x = _powdiff(v, w, h - m, l - g, width=width, impl=impl)
-    tmp = K.mul(w, x, w2, impl=impl)
-    sh = A.shift(tmp, 2 * m - h)[:width]      # 2m-h <= 0 always here
-    wm = A.shift(w, m)
-    res_pos = A.add(wm, sh)
-    res_neg = A.sub(wm, sh)
-    # floor correction: dropped limbs of tmp nonzero -> one more off
-    drop = h - 2 * m
-    idx = jnp.arange(w2, dtype=_I)
-    dropped_nz = jnp.any((idx < drop) & (tmp != 0))
-    res_neg = jnp.where(dropped_nz, A.sub_scalar(res_neg, 1), res_neg)
-    return jnp.where(sign, res_pos, res_neg)
-
-
 def _refine(v, h, k, w, *, width, iters_max, impl, windowed=True):
     """Guarded shorter-iterate/divisor-prefix refinement loop.
 
@@ -134,6 +114,11 @@ def _refine(v, h, k, w, *, width, iters_max, impl, windowed=True):
     l <= g+3 where indices are < 32; the close branch bounds every
     value by B^L with L <= 2l+2g+2 < window; the w*x product fits the
     doubled window since 3*2^i+12 < 4*2^i+32.)
+
+    Each iteration runs through `K.fused_step` (the prologue shift,
+    PowDiff + select, w*x update, floor correction, -1 normalization
+    and active-instance select): two batched Pallas launches under
+    impl="pallas_fused", the reference composition elsewhere.
     """
     g = GUARD
     l = jnp.asarray(2, _I)
@@ -146,14 +131,8 @@ def _refine(v, h, k, w, *, width, iters_max, impl, windowed=True):
         active = i < need
         m = jnp.clip(jnp.minimum(hk + 1 - l, l), 0, None)
         s = jnp.maximum(0, k - 2 * l + 1 - g)
-        v_pre = A.shift(v, -s)[:wi]
-        w_new = _step(k + l + m - s + g, v_pre, w[:wi], m, l, g,
-                      width=wi, impl=impl)
-        w_new = A.shift(w_new, -1)
-        if wi < width:
-            w_new = jnp.concatenate(
-                [w_new, jnp.zeros((width - wi,), w_new.dtype)])
-        w = jnp.where(active, w_new, w)
+        w = K.fused_step(v, w, h=k + l + m - s + g, m=m, l=l, s=s,
+                         active=active, g=g, win=wi, impl=impl)
         l = jnp.where(active, l + m - 1, l)
     return A.shift(w, h - k - l - g)
 
@@ -162,7 +141,11 @@ def shinv_fixed(v: jax.Array, h: jax.Array, *, iters_max: int,
                 impl: str | None = None,
                 windowed: bool = True) -> jax.Array:
     """shinv_h(v) + lambda, lambda in {0,1} (Theorem 2). v: (W,) limbs,
-    h: int32 scalar (may be traced)."""
+    h: int32 scalar (may be traced).
+
+    Contract at v == 0: returns 0 (there is no finite floor(B^h / 0);
+    0 is the fixed point that makes `divmod_fixed` total -- see the
+    module docstring)."""
     width = v.shape[0]
     h = jnp.asarray(h, _I)
 
@@ -189,6 +172,9 @@ def shinv_fixed(v: jax.Array, h: jax.Array, *, iters_max: int,
     w = jnp.where(case_pow, one_hot_pow(h_eff - k, width), w)
     w = jnp.where(case_one, one_hot_pow(0, width), w)
     w = jnp.where(case_zero, jnp.zeros((width,), _U), w)
+    # v == 0: the masked _initial_w0 seed refined garbage; define the
+    # result as 0 (documented zero-divisor contract)
+    w = jnp.where(A.is_zero(v), jnp.zeros((width,), _U), w)
     return w
 
 
@@ -197,28 +183,24 @@ def divmod_fixed(u: jax.Array, v: jax.Array,
                  windowed: bool = True) -> tuple[jax.Array, jax.Array]:
     """(q, r) with u = q*v + r, 0 <= r < v.  u, v: (M,) limb vectors.
 
-    Algorithm 3 with the revised delta in {-1, 0, +1} correction.
+    Algorithm 3 with the revised delta in {-1, 0, +1} correction; the
+    finalization (u*shinv >> h, v*q, compare-and-correct) runs through
+    `K.fused_correct` -- one batched Pallas launch under
+    impl="pallas_fused".
+
+    Zero-divisor contract: divmod_fixed(u, 0) = (0, u) (total
+    extension; both fused and reference paths implement it).
     """
     m_limbs = u.shape[0]
     width = m_limbs + PAD
-    iters_max = math.ceil(math.log2(max(m_limbs, 2))) + 2
+    iters_max = refine_iters(m_limbs)
     uw = jnp.zeros((width,), _U).at[:m_limbs].set(u.astype(_U))
     vw = jnp.zeros((width,), _U).at[:m_limbs].set(v.astype(_U))
 
     h = A.prec(uw)
     si = shinv_fixed(vw, h, iters_max=iters_max, impl=impl,
                      windowed=windowed)
-    p = K.mul(uw, si, 2 * width, impl=impl)      # double-precision product
-    q = A.shift(p, -h)[:width]
-    mm = K.mul(vw, q, width, impl=impl)          # v*q fits width
-
-    d_neg = A.lt(uw, mm)                         # delta = -1
-    q = jnp.where(d_neg, A.sub_scalar(q, 1), q)
-    mm = jnp.where(d_neg, A.sub(mm, vw), mm)
-    r = A.sub(uw, mm)
-    d_pos = A.ge(r, vw)                          # delta = +1
-    q = jnp.where(d_pos, A.add_scalar(q, 1), q)
-    r = jnp.where(d_pos, A.sub(r, vw), r)
+    q, r = K.fused_correct(uw, vw, si, h=h, impl=impl)
     return q[:m_limbs], r[:m_limbs]
 
 
@@ -229,7 +211,10 @@ def divmod_batch(u: jax.Array, v: jax.Array, impl: str | None = None,
 
     With `impl="pallas_batched"` every internal multiplication runs as
     ONE natively batched kernel launch over the whole batch (the
-    custom_vmap rule in kernels/ops.py), not a per-lane grid."""
+    custom_vmap rule in kernels/ops.py), not a per-lane grid.  With
+    `impl="pallas_fused"` the glue arithmetic fuses in too: the whole
+    batched division is 2 launches per Refine iteration plus 1 for the
+    finalization -- nothing else touches the limbs from XLA."""
     return jax.vmap(
         lambda a, b: divmod_fixed(a, b, impl=impl, windowed=windowed)
     )(u, v)

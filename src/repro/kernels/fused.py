@@ -1,0 +1,714 @@
+"""Fused division-step kernels: multiplication + glue in one launch.
+
+The paper's cost model for the shifted-inverse Newton division counts
+*multiplications only* because its CUDA implementation fuses everything
+else -- carry resolution, shifts, precision/sign bookkeeping, the
+PowDiff select -- into the same kernel that does the multiply.  The
+JAX port previously ran only the products in Pallas; each Refine
+iteration additionally issued ~15 separate XLA ops (associative carry
+scans, `prec`, `shift`, `neg_mod_pow`, masked selects), every one a
+full-width HBM round trip.  This module restores the paper's fusion:
+
+  step_pallas     one Refine iteration (`shinv` Step, Algorithm 1) in
+                  TWO batched Pallas launches: (1) PowDiff product +
+                  sign/magnitude select, (2) w*x product + shift/add/
+                  sub + floor correction + normalization shift +
+                  active-instance select.
+  correct_pallas  the `divmod_fixed` finalization (u*shinv >> h, v*q,
+                  the delta in {-1,0,+1} compare-and-correct) in ONE
+                  launch.
+  barrett_pallas  `modarith.barrett_reduce`'s two truncated products +
+                  two conditional subtracts in ONE launch.
+
+Each kernel processes BLOCK_B instances per grid step (batch as the
+leading grid axis, the paper's one-instance-per-CUDA-block schedule)
+with the whole operand resident in VMEM; the glue arithmetic runs on
+those tiles between the MXU products.  The `core.arith` primitives are
+ported to Pallas-callable in-kernel forms below (`_k_*`): the
+associative carry/borrow scans become Kogge-Stone ladders of log2(W)
+static rolls, dynamic limb shifts become conditional-rotate ladders
+driven by the bits of the per-instance shift amount, and `prec` /
+`take_limb` / comparisons become masked reductions -- no gathers, no
+1-D iota, nothing the Mosaic lowering rejects.
+
+`step_reference` / `correct_reference` / `barrett_reference` are the
+unfused compositions (K.mul products + core.arith glue in XLA) that
+every other impl falls back to; `kernels.ops.fused_step` etc. own the
+dispatch.  Bit-exactness of fused vs reference is asserted across the
+whole windowed Refine schedule in tests/test_fused.py.
+
+Off-TPU the kernels run in Pallas interpret mode (validation only; the
+launch-count reduction is structural and backend-independent, see
+benchmarks/div_breakdown.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.custom_batching
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.bigint import MASK, DTYPE
+from repro.core import arith as A
+from . import ops as K
+from .bigmul import _toep_tile, pick_block_b
+from .ops import BLOCK_T
+
+_I = jnp.int32
+_U = jnp.uint32
+
+# Kernel-launch / glue-op accounting, consumed by serving.batching
+# .kernel_plan and benchmarks/div_breakdown.py.
+FUSED_STEP_LAUNCHES = 2        # PowDiff launch + update launch
+FUSED_CORRECT_LAUNCHES = 1
+FUSED_BARRETT_LAUNCHES = 1
+# Full-width XLA ops (several containing associative scans, i.e. their
+# own launch + HBM round trip) in step_reference: shift(v,-s), 2x prec,
+# 2x is_zero, neg_mod_pow(p,h), sub_pow, one_hot select, mask_below,
+# take_limb, neg_mod_pow(P,L), x select, shift(tmp), shift(w,m), add,
+# sub, sub_scalar, shift(-1), active select.
+UNFUSED_STEP_GLUE_OPS = 19
+
+
+def _rup(n: int, k: int) -> int:
+    return -(-n // k) * k
+
+
+def _iota(p: int) -> jax.Array:
+    return jax.lax.broadcasted_iota(_I, (1, p), 1)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel limb primitives (Pallas-callable ports of core.arith)
+#
+# All operate on (bb, P) int32 arrays of base-2^16 limbs at a padded
+# static width P, with an explicit `width` argument reproducing the
+# EXACT wrap/truncate semantics of the corresponding core.arith op at
+# its unfused array width: operands are masked to `width` and results
+# re-masked, so padding limbs never leak into the low `width` limbs
+# (carries/borrows only travel upward).  Per-instance traced scalars
+# arrive as (bb, 1) columns and broadcast.
+# ---------------------------------------------------------------------------
+
+def _k_msk(u: jax.Array, width) -> jax.Array:
+    """u with limbs at index >= width zeroed (truncation to B^width)."""
+    return jnp.where(_iota(u.shape[-1]) < width, u, 0)
+
+
+def _k_scan(gen: jax.Array, prop: jax.Array) -> jax.Array:
+    """Inclusive (generate, propagate) scan -> carry out of each limb.
+
+    Kogge-Stone ladder of log2(P) static rolls: the in-kernel form of
+    `arith.carry_scan`'s associative scan (identity element (0, 1))."""
+    p_ = gen.shape[-1]
+    idx = _iota(p_)
+    g, p = gen, prop
+    sft = 1
+    while sft < p_:
+        gs = jnp.where(idx >= sft, jnp.roll(g, sft, axis=-1), 0)
+        ps = jnp.where(idx >= sft, jnp.roll(p, sft, axis=-1), 1)
+        g = g | (p & gs)
+        p = p & ps
+        sft <<= 1
+    return g
+
+
+def _k_carry_in(gen: jax.Array, prop: jax.Array) -> jax.Array:
+    """Exclusive form of `_k_scan`: carry INTO each limb."""
+    g = _k_scan(gen, prop)
+    return jnp.where(_iota(g.shape[-1]) >= 1, jnp.roll(g, 1, axis=-1), 0)
+
+
+def _k_add(u: jax.Array, v: jax.Array, width) -> jax.Array:
+    """(u + v) mod B^width  (arith.add at array width `width`)."""
+    s = u + v
+    gen = (s >> 16).astype(_I)
+    prop = ((s & MASK) == MASK).astype(_I)
+    c = _k_carry_in(gen, prop)
+    return _k_msk((s + c) & MASK, width)
+
+
+def _k_sub(u: jax.Array, v: jax.Array, width) -> jax.Array:
+    """(u - v) mod B^width  (arith.sub; exact when u >= v)."""
+    d = u - v
+    gen = (u < v).astype(_I)
+    prop = (u == v).astype(_I)
+    b = _k_carry_in(gen, prop)
+    return _k_msk((d - b) & MASK, width)
+
+
+def _k_lt(u: jax.Array, v: jax.Array) -> jax.Array:
+    """u < v as a (bb, 1) bool column: the borrow OUT of the full
+    subtraction (inclusive scan result at the top limb)."""
+    gen = (u < v).astype(_I)
+    prop = (u == v).astype(_I)
+    g = _k_scan(gen, prop)
+    return g[:, -1:] != 0
+
+
+def _k_is_zero(u: jax.Array) -> jax.Array:
+    return ~jnp.any(u != 0, axis=-1, keepdims=True)
+
+
+def _k_prec(u: jax.Array) -> jax.Array:
+    """Significant-limb count as a (bb, 1) column (arith.prec)."""
+    idx = _iota(u.shape[-1])
+    return jnp.max(jnp.where(u != 0, idx + 1, 0), axis=-1, keepdims=True)
+
+
+def _k_take(u: jax.Array, i) -> jax.Array:
+    """u[i] with per-instance traced i; 0 out of range (arith.take_limb)."""
+    return jnp.sum(jnp.where(_iota(u.shape[-1]) == i, u, 0),
+                   axis=-1, keepdims=True)
+
+
+def _k_shift(u: jax.Array, n, width) -> jax.Array:
+    """Whole limb shift by n (arith.shift at array width `width`).
+
+    Static python n: one roll.  Per-instance traced n (a (bb, 1)
+    column): a ladder of log2(P) conditional rolls driven by the bits
+    of n mod P -- the in-kernel analogue of the host-side conditional-
+    rotate Toeplitz staging.  The validity mask uses the UN-reduced n,
+    so |n| >= width correctly yields zero."""
+    p_ = u.shape[-1]
+    idx = _iota(p_)
+    if isinstance(n, int):
+        r = jnp.roll(u, n, axis=-1) if n % p_ else u
+    else:
+        nn = jnp.remainder(n.astype(_I), p_)        # floor-mod -> [0, P)
+        r = u
+        k = 0
+        while (1 << k) < p_:
+            r = jnp.where(((nn >> k) & 1) == 1,
+                          jnp.roll(r, 1 << k, axis=-1), r)
+            k += 1
+    src = idx - n
+    return jnp.where((src >= 0) & (src < width) & (idx < width), r, 0)
+
+
+def _k_one_at(p_: int, i, width) -> jax.Array:
+    """B^i as limbs at padded width p_ (bigint.one_hot_pow at `width`)."""
+    idx = _iota(p_)
+    return jnp.where((idx == i) & (idx < width), 1, 0)
+
+
+def _k_neg_mod_pow(u: jax.Array, L, width) -> jax.Array:
+    """B^L - u for 0 < u < B^L (arith.neg_mod_pow at width `width`)."""
+    idx = _iota(u.shape[-1])
+    comp = jnp.where((idx < L) & (idx < width), MASK - u, 0)
+    return _k_add(comp, _k_one_at(u.shape[-1], 0, width), width)
+
+
+def _k_sub_pow(u: jax.Array, p, width) -> jax.Array:
+    """u - B^p, lowest-nonzero ripple decrement (arith.sub_pow)."""
+    idx = _iota(u.shape[-1])
+    cand = (u != 0) & (idx >= p)
+    n = jnp.min(jnp.where(cand, idx, width), axis=-1, keepdims=True)
+    dec = (idx >= p) & (idx <= n)
+    return jnp.where(dec, (u - 1) & MASK, u)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel multiplication: block-Toeplitz MXU products + full carry
+# resolution, all on the VMEM-resident tiles
+# ---------------------------------------------------------------------------
+
+def _k_split8(u: jax.Array) -> jax.Array:
+    """(bb, P) base-2^16 limbs -> (bb, 2P) base-2^8 sub-digits."""
+    lo = u & 0xFF
+    hi = (u >> 8) & 0xFF
+    return jnp.stack([lo, hi], axis=-1).reshape(u.shape[0], -1)
+
+
+def _k_pack8(d: jax.Array) -> jax.Array:
+    """(bb, 2P) base-2^8 digits -> (bb, P) base-2^16 limbs."""
+    pairs = d.reshape(d.shape[0], -1, 2)
+    return pairs[..., 0] + (pairs[..., 1] << 8)
+
+
+def _k_resolve8(raw: jax.Array) -> jax.Array:
+    """Canonicalize raw sub-digit sums (< 2^31) to digits < 2^8: four
+    local split passes then one Kogge-Stone carry scan (the in-kernel
+    fusion of `ops._resolve8`)."""
+    idx = _iota(raw.shape[-1])
+    e = raw
+    for _ in range(4):                      # carry magnitude /2^8 per pass
+        d = e & 0xFF
+        c = e >> 8
+        e = d + jnp.where(idx >= 1, jnp.roll(c, 1, axis=-1), 0)
+    gen = e >> 8                            # in {0, 1}
+    prop = ((e & 0xFF) == 0xFF).astype(_I)
+    c = _k_carry_in(gen, prop)
+    return (e + c) & 0xFF
+
+
+def _k_mul(u: jax.Array, v: jax.Array, out_width: int, pg: int,
+           cu: int | None = None, cv: int | None = None) -> jax.Array:
+    """Exact (u * v) mod B^out_width on (bb, P) int32 limb tiles.
+
+    The same block-Toeplitz schedule as `bigmul.mul_pallas_batched` --
+    BLOCK_T-sized sub-digit tiles, Toeplitz staging by conditional
+    rotates, diagonal pruning at d_keep = ceil(2*out_width / T) -- but
+    unrolled INSIDE the kernel over the VMEM-resident operand, with the
+    carry resolution fused immediately after, so the canonical product
+    limbs are available in-register for the glue that follows.  Result
+    is masked to out_width at padded width `pg`.
+
+    cu/cv bound the operands' CONTENT width in limbs (they are masked
+    to it by the caller); blocks past the content are all-zero and are
+    pruned from the schedule structurally, like the unfused kernels'
+    operand clipping.
+    """
+    bb = u.shape[0]
+    t = BLOCK_T
+    n8o = 2 * out_width                     # sub-digit positions kept
+    d_keep = -(-n8o // t)
+    u8 = _k_split8(u)
+    v8 = _k_split8(v)
+    n8k = min(u8.shape[-1], _rup(n8o, t))   # output clip: >= n8o is dead
+    n8u = min(n8k, _rup(2 * (cu or pg), t))   # content clip: zeros beyond
+    n8v = min(n8k, _rup(2 * (cv or pg), t))
+    nu = n8u // t
+    nv = n8v // t
+    u8 = u8[:, :n8u]
+    v8 = v8[:, :n8v]
+
+    ndiag = min(nu + nv - 1, d_keep)
+    n8r = (ndiag + 1) * t                   # top tile spills one block up
+    segs = [None] * ndiag                   # per-diagonal (bb, 2t) sums
+    for j in range(nv):
+        toep = _toep_tile(v8[:, j * t:(j + 1) * t])          # (bb, t, 2t)
+        for i in range(nu):
+            d = i + j
+            if d >= d_keep:
+                continue
+            prod = jax.lax.dot_general(
+                u8[:, i * t:(i + 1) * t], toep,
+                dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+                preferred_element_type=_I)                   # (bb, 2t)
+            segs[d] = prod if segs[d] is None else segs[d] + prod
+    # overlap-add of the (bb, 2t) diagonal tiles into (bb, n8r) raw
+    # sums: tile d covers [d*t, d*t + 2t) -- pure concatenates, no
+    # scatter (Pallas-lowerable)
+    z = jnp.zeros((bb, t), _I)
+    lo = jnp.concatenate([s[:, :t] for s in segs] + [z], axis=-1)
+    hi = jnp.concatenate([z] + [s[:, t:] for s in segs], axis=-1)
+    raw = lo + hi
+
+    d8 = _k_resolve8(raw)
+    d8 = jnp.where(_iota(n8r) < n8o, d8, 0)                  # mod B^out_width
+    limbs = _k_pack8(d8)                                     # (bb, n8r//2)
+    if limbs.shape[-1] < pg:
+        limbs = jnp.concatenate(
+            [limbs, jnp.zeros((bb, pg - limbs.shape[-1]), _I)], axis=-1)
+    else:
+        limbs = limbs[:, :pg]                # dropped limbs are >= out_width
+    return _k_msk(limbs, out_width)
+
+
+# ---------------------------------------------------------------------------
+# kernel bodies
+# ---------------------------------------------------------------------------
+
+def _powdiff_kernel(v_ref, w_ref, h_ref, l_ref, s_ref, sign_ref, x_ref,
+                    *, win: int, full_w: int, pg: int):
+    """Launch 1 of a Refine iteration: shifted-divisor prologue, the
+    PowDiff product, and the Algorithm-2 sign/magnitude select.
+
+    Mirrors `_powdiff_reference` op for op; h_ref/l_ref carry the
+    already-offset h-m and l-g columns."""
+    w2 = 2 * win
+    idx = _iota(pg)
+    hpd = h_ref[...]
+    lpd = l_ref[...]
+    s = s_ref[...]
+    v = _k_msk(v_ref[...], full_w)
+    vp = _k_msk(_k_shift(v, 0 - s, full_w), win)             # shift(v,-s)[:win]
+    wq = _k_msk(w_ref[...], win)
+
+    p_ = _k_mul(vp, wq, w2, pg, cu=win, cv=win)
+    pv = _k_prec(vp)
+    pw = _k_prec(wq)
+    L = pv + pw - lpd + 1
+    vz = _k_is_zero(vp)
+    wz = _k_is_zero(wq)
+    full = vz | wz | (L >= hpd)
+    # ---- full branch: compare p with B^h
+    sign_full = _k_prec(p_) <= hpd
+    mag_pos = _k_msk(_k_neg_mod_pow(p_, hpd, w2), win)
+    mag_neg = _k_msk(_k_sub_pow(p_, hpd, w2), win)
+    x_full = jnp.where(sign_full, mag_pos, mag_neg)
+    x_full = jnp.where(vz | wz, _k_one_at(pg, hpd, win), x_full)
+    # ---- close branch: P = (v*w) mod B^L, sign from top digit of P
+    pc = jnp.where((idx < L) & (idx < win), p_, 0)           # mask_below[:win]
+    pz = _k_is_zero(pc)
+    ptop = _k_take(pc, L - 1)
+    sign_close = pz | (ptop != 0)
+    x_close = jnp.where(pz, jnp.zeros_like(pc),
+                        jnp.where(ptop == 0, pc,
+                                  _k_msk(_k_neg_mod_pow(pc, L, win), win)))
+
+    sign_ref[...] = jnp.where(full, sign_full, sign_close).astype(_I)
+    x_ref[...] = jnp.where(full, x_full, x_close)
+
+
+def _update_kernel(w_ref, x_ref, sg_ref, h_ref, m_ref, a_ref, o_ref,
+                   *, win: int, full_w: int, pg: int):
+    """Launch 2 of a Refine iteration: the w*x product, shift/add/sub,
+    floor correction, the -1 normalization shift, and the active-
+    instance select back into the full-width iterate."""
+    w2 = 2 * win
+    idx = _iota(pg)
+    h = h_ref[...]
+    m = m_ref[...]
+    sign = sg_ref[...] != 0
+    act = a_ref[...] != 0
+    w_full = _k_msk(w_ref[...], full_w)
+    wq = _k_msk(w_full, win)
+    x = _k_msk(x_ref[...], win)
+
+    tmp = _k_mul(wq, x, w2, pg, cu=win, cv=win)
+    sh = _k_msk(_k_shift(tmp, 2 * m - h, w2), win)           # 2m-h <= 0 here
+    wm = _k_shift(wq, m, win)
+    res_pos = _k_add(wm, sh, win)
+    res_neg = _k_sub(wm, sh, win)
+    # floor correction: dropped limbs of tmp nonzero -> one more off
+    drop = h - 2 * m
+    dropped = jnp.any((idx < drop) & (tmp != 0), axis=-1, keepdims=True)
+    one0 = _k_one_at(pg, 0, win)
+    res_neg = jnp.where(dropped, _k_sub(res_neg, one0, win), res_neg)
+    res = jnp.where(sign, res_pos, res_neg)
+    res = _k_shift(res, -1, win)                             # normalization
+    o_ref[...] = jnp.where(act, res, w_full)
+
+
+def _correct_kernel(u_ref, v_ref, si_ref, h_ref, q_ref, r_ref,
+                    *, full_w: int, pg: int):
+    """divmod finalization: q = floor(u*si / B^h), mm = v*q, then the
+    delta in {-1,0,+1} compare-and-correct (Algorithm 3), plus the
+    documented total extension divmod(u, 0) = (0, u)."""
+    w2 = 2 * full_w
+    h = h_ref[...]
+    u = _k_msk(u_ref[...], full_w)
+    v = _k_msk(v_ref[...], full_w)
+    si = _k_msk(si_ref[...], full_w)
+
+    p_ = _k_mul(u, si, w2, pg, cu=full_w, cv=full_w)   # double-precision
+    q = _k_msk(_k_shift(p_, 0 - h, w2), full_w)
+    mm = _k_mul(v, q, full_w, pg, cu=full_w, cv=full_w)   # v*q fits full_w
+
+    one0 = _k_one_at(pg, 0, full_w)
+    d_neg = _k_lt(u, mm)                     # delta = -1
+    q = jnp.where(d_neg, _k_sub(q, one0, full_w), q)
+    mm = jnp.where(d_neg, _k_sub(mm, v, full_w), mm)
+    r = _k_sub(u, mm, full_w)
+    d_pos = ~_k_lt(r, v)                     # delta = +1
+    q = jnp.where(d_pos, _k_add(q, one0, full_w), q)
+    r = jnp.where(d_pos, _k_sub(r, v, full_w), r)
+    vz = _k_is_zero(v)
+    q_ref[...] = jnp.where(vz, jnp.zeros_like(q), q)
+    r_ref[...] = jnp.where(vz, u, r)
+
+
+def _barrett_kernel(x_ref, mu_ref, v_ref, r_ref, *, h: int, full_w: int,
+                    pg: int):
+    """Barrett reduction: two truncated products + two conditional
+    subtracts at STATIC shift h (the cached-inverse hot path)."""
+    w2 = 2 * full_w
+    x = _k_msk(x_ref[...], full_w)
+    mu = _k_msk(mu_ref[...], full_w)
+    v = _k_msk(v_ref[...], full_w)
+
+    p_ = _k_mul(x, mu, w2, pg, cu=full_w, cv=full_w)
+    q = _k_msk(_k_shift(p_, -h, w2), full_w)
+    qv = _k_mul(q, v, full_w, pg, cu=full_w, cv=full_w)
+
+    over = _k_lt(x, qv)                      # qhat = q+1
+    qv = jnp.where(over, _k_sub(qv, v, full_w), qv)
+    r = _k_sub(x, qv, full_w)
+    under = ~_k_lt(r, v)                     # qhat = q-1
+    r_ref[...] = jnp.where(under, _k_sub(r, v, full_w), r)
+
+
+# ---------------------------------------------------------------------------
+# batched pallas_call plumbing + custom_vmap wrappers
+# ---------------------------------------------------------------------------
+
+def _interp() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _pad2(a: jax.Array, p: int) -> jax.Array:
+    """(batch, w) -> (batch, p) int32, zero-padded on the limb axis."""
+    a = a.astype(_I)
+    if a.shape[-1] < p:
+        a = jnp.concatenate(
+            [a, jnp.zeros((a.shape[0], p - a.shape[-1]), _I)], axis=-1)
+    return a[:, :p]
+
+
+def _col(a: jax.Array, batch: int) -> jax.Array:
+    return jnp.reshape(a.astype(_I), (batch, 1))
+
+
+def _launch(kernel, arrays, cols, out_widths, pg: int):
+    """pallas_call a fused kernel over the batch as the leading grid
+    axis: BLOCK_B instances per step, whole (bb, pg) operands in VMEM,
+    per-instance scalars as (bb, 1) columns."""
+    batch = arrays[0].shape[0]
+    bb = pick_block_b(batch)
+    bp = -(-batch // bb) * bb
+    ins = [_pad2(a, pg) for a in arrays] + [_col(c, batch) for c in cols]
+    if bp > batch:
+        ins = [jnp.concatenate(
+            [a, jnp.zeros((bp - batch,) + a.shape[1:], a.dtype)])
+            for a in ins]
+    n_arr = len(arrays)
+    in_specs = (
+        [pl.BlockSpec((bb, pg), lambda b: (b, 0)) for _ in range(n_arr)] +
+        [pl.BlockSpec((bb, 1), lambda b: (b, 0)) for _ in cols])
+    out_specs = [pl.BlockSpec((bb, 1 if w == 1 else pg), lambda b: (b, 0))
+                 for w in out_widths]
+    out_shape = [jax.ShapeDtypeStruct((bp, 1 if w == 1 else pg), _I)
+                 for w in out_widths]
+    outs = pl.pallas_call(
+        kernel,
+        grid=(bp // bb,),
+        in_specs=in_specs,
+        out_specs=out_specs if len(out_specs) > 1 else out_specs[0],
+        out_shape=out_shape if len(out_shape) > 1 else out_shape[0],
+        interpret=_interp(),
+    )(*ins)
+    outs = outs if isinstance(outs, (list, tuple)) else (outs,)
+    return [o[:batch, 0] if w == 1 else o[:batch, :w].astype(DTYPE)
+            for o, w in zip(outs, out_widths)]
+
+
+def _bcast(axis_size, in_batched, *args):
+    return [a if b else jnp.broadcast_to(a, (axis_size,) + jnp.shape(a))
+            for a, b in zip(args, in_batched)]
+
+
+@functools.lru_cache(maxsize=None)
+def _powdiff_cv(win: int, full_w: int, pg: int):
+    kern = functools.partial(_powdiff_kernel, win=win, full_w=full_w, pg=pg)
+
+    def batched(v, w, hpd, lpd, s):
+        sign, x = _launch(kern, (v, w), (hpd, lpd, s), (1, full_w), pg)
+        return sign != 0, x
+
+    @jax.custom_batching.custom_vmap
+    def f(v, w, hpd, lpd, s):
+        sign, x = batched(v[None], w[None], hpd[None], lpd[None], s[None])
+        return sign[0], x[0]
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        return batched(*_bcast(axis_size, in_batched, *args)), (True, True)
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _update_cv(win: int, full_w: int, pg: int):
+    kern = functools.partial(_update_kernel, win=win, full_w=full_w, pg=pg)
+
+    def batched(w, x, sign, h, m, act):
+        (out,) = _launch(kern, (w, x), (sign, h, m, act), (full_w,), pg)
+        return out
+
+    @jax.custom_batching.custom_vmap
+    def f(w, x, sign, h, m, act):
+        return batched(w[None], x[None], sign[None], h[None], m[None],
+                       act[None])[0]
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        return batched(*_bcast(axis_size, in_batched, *args)), True
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _correct_cv(full_w: int, pg: int):
+    kern = functools.partial(_correct_kernel, full_w=full_w, pg=pg)
+
+    def batched(u, v, si, h):
+        q, r = _launch(kern, (u, v, si), (h,), (full_w, full_w), pg)
+        return q, r
+
+    @jax.custom_batching.custom_vmap
+    def f(u, v, si, h):
+        q, r = batched(u[None], v[None], si[None], h[None])
+        return q[0], r[0]
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        return batched(*_bcast(axis_size, in_batched, *args)), (True, True)
+
+    return f
+
+
+@functools.lru_cache(maxsize=None)
+def _barrett_cv(full_w: int, pg: int, h: int):
+    kern = functools.partial(_barrett_kernel, h=h, full_w=full_w, pg=pg)
+
+    def batched(x, mu, v):
+        (r,) = _launch(kern, (x, mu, v), (), (full_w,), pg)
+        return r
+
+    @jax.custom_batching.custom_vmap
+    def f(x, mu, v):
+        return batched(x[None], mu[None], v[None])[0]
+
+    @f.def_vmap
+    def _rule(axis_size, in_batched, *args):
+        return batched(*_bcast(axis_size, in_batched, *args)), True
+
+    return f
+
+
+# ---------------------------------------------------------------------------
+# public fused entry points (per-instance; batch via jax.vmap -- the
+# custom_vmap rules route whole batches into single launches)
+# ---------------------------------------------------------------------------
+
+def step_pallas(v, w, *, h, m, l, s, active, g: int, win: int):
+    """One Refine iteration in two batched Pallas launches."""
+    full_w = v.shape[-1]
+    pg = max(_rup(2 * win, 64), _rup(full_w, 64))
+    hpd = jnp.asarray(h - m, _I)
+    lpd = jnp.asarray(l - g, _I)
+    sign, x = _powdiff_cv(win, full_w, pg)(
+        v, w, hpd, lpd, jnp.asarray(s, _I))
+    return _update_cv(win, full_w, pg)(
+        w, x, jnp.asarray(sign, _I), jnp.asarray(h, _I), jnp.asarray(m, _I),
+        jnp.asarray(active, _I))
+
+
+def correct_pallas(u, v, si, *, h):
+    """divmod finalization in one batched Pallas launch -> (q, r)."""
+    full_w = u.shape[-1]
+    pg = _rup(2 * full_w, 64)
+    q, r = _correct_cv(full_w, pg)(u, v, si, jnp.asarray(h, _I))
+    return q, r
+
+
+def barrett_pallas(x, mu, v, *, h: int):
+    """Barrett reduction core in one batched Pallas launch -> r."""
+    full_w = mu.shape[-1]
+    pg = _rup(2 * full_w, 64)
+    return _barrett_cv(full_w, pg, h)(x, mu, v)
+
+
+# ---------------------------------------------------------------------------
+# reference compositions (the unfused fallback: K.mul products + XLA
+# glue).  These are the former shinv._powdiff / shinv._step bodies and
+# the divmod_fixed / barrett_reduce tails, verbatim; the fused kernels
+# above are asserted bit-identical to them in tests/test_fused.py.
+# ---------------------------------------------------------------------------
+
+def _powdiff_reference(v, w, h, l, *, width, impl):
+    """(sign, x = |B^h - v*w|) per Algorithm 2.  v, w: (width,) limbs.
+
+    One full product serves both the full and the close branch (the
+    close product only saves work at the kernel level; the Pallas
+    mulmod kernel skips high blocks when the static window allows it).
+    """
+    w2 = 2 * width
+    pv, pw = A.prec(v), A.prec(w)
+    L = pv + pw - l + 1
+    p = K.mul(v, w, w2, impl=impl)
+
+    full = A.is_zero(v) | A.is_zero(w) | (L >= h)
+    # ---- full branch: compare p with B^h
+    sign_full = A.prec(p) <= h               # p < B^h  (p == B^h -> mag 0)
+    mag_pos = A.neg_mod_pow(p, h)[:width]    # B^h - p   (needs p < B^h)
+    mag_neg = A.sub_pow(p, h)[:width]        # p - B^h   (Listing 1.3)
+    x_full = jnp.where(sign_full, mag_pos, mag_neg)
+    x_full = jnp.where(A.is_zero(v) | A.is_zero(w),
+                       _one_hot(h, width), x_full)           # |B^h - 0|
+    # ---- close branch: P = (v*w) mod B^L, sign from top digit of P
+    P = A.mask_below(p, L)[:width]
+    p_zero = A.is_zero(P)
+    p_top = A.take_limb(P, L - 1)
+    sign_close = p_zero | (p_top != 0)
+    x_close = jnp.where(p_zero, jnp.zeros((width,), _U),
+                        jnp.where(p_top == 0, P, A.neg_mod_pow(P, L)[:width]))
+
+    sign = jnp.where(full, sign_full, sign_close)
+    x = jnp.where(full, x_full, x_close)
+    return sign, x
+
+
+def _one_hot(p, m):
+    idx = jnp.arange(m, dtype=_I)
+    return jnp.where(idx == p, _U(1), _U(0))
+
+
+def step_reference(v, w, *, h, m, l, s, active, g: int, win: int, impl):
+    """One Refine iteration as the unfused composition (Algorithm 1
+    Step, floor-exact, plus the prologue shift, the -1 normalization
+    and the active-instance select)."""
+    width = v.shape[-1]
+    w2 = 2 * win
+    v_pre = A.shift(v, -s)[:win]
+    wq = w[:win]
+    sign, x = _powdiff_reference(v_pre, wq, h - m, l - g, width=win,
+                                 impl=impl)
+    tmp = K.mul(wq, x, w2, impl=impl)
+    sh = A.shift(tmp, 2 * m - h)[:win]        # 2m-h <= 0 always here
+    wm = A.shift(wq, m)
+    res_pos = A.add(wm, sh)
+    res_neg = A.sub(wm, sh)
+    # floor correction: dropped limbs of tmp nonzero -> one more off
+    drop = h - 2 * m
+    idx = jnp.arange(w2, dtype=_I)
+    dropped_nz = jnp.any((idx < drop) & (tmp != 0))
+    res_neg = jnp.where(dropped_nz, A.sub_scalar(res_neg, 1), res_neg)
+    w_new = jnp.where(sign, res_pos, res_neg)
+    w_new = A.shift(w_new, -1)
+    if win < width:
+        w_new = jnp.concatenate(
+            [w_new, jnp.zeros((width - win,), w_new.dtype)])
+    return jnp.where(active, w_new, w)
+
+
+def correct_reference(u, v, si, *, h, impl):
+    """Algorithm 3 finalization with the revised delta in {-1, 0, +1}
+    correction; divmod(u, 0) = (0, u) by the documented contract."""
+    width = u.shape[-1]
+    p = K.mul(u, si, 2 * width, impl=impl)   # double-precision product
+    q = A.shift(p, -h)[:width]
+    mm = K.mul(v, q, width, impl=impl)       # v*q fits width
+
+    d_neg = A.lt(u, mm)                      # delta = -1
+    q = jnp.where(d_neg, A.sub_scalar(q, 1), q)
+    mm = jnp.where(d_neg, A.sub(mm, v), mm)
+    r = A.sub(u, mm)
+    d_pos = A.ge(r, v)                       # delta = +1
+    q = jnp.where(d_pos, A.add_scalar(q, 1), q)
+    r = jnp.where(d_pos, A.sub(r, v), r)
+    vz = A.is_zero(v)
+    q = jnp.where(vz, jnp.zeros_like(q), q)
+    r = jnp.where(vz, u, r)
+    return q, r
+
+
+def barrett_reference(x, mu, v, *, h, impl):
+    """Two truncated products + two conditional subtracts (the
+    barrett_reduce tail; qhat error in {-1, 0, +1})."""
+    width = x.shape[-1]
+    p = K.mul(x, mu, 2 * width, impl=impl)
+    q = A.shift(p, -h)[:width]
+    qv = K.mul(q, v, width, impl=impl)
+
+    over = A.lt(x, qv)                       # qhat = q+1
+    qv = jnp.where(over, A.sub(qv, v), qv)
+    r = A.sub(x, qv)
+    under = A.ge(r, v)                       # qhat = q-1
+    r = jnp.where(under, A.sub(r, v), r)
+    return r

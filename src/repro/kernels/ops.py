@@ -30,8 +30,19 @@ multi-precision product:
                  Refine pay one kernel launch per product, not one per
                  batch lane.
 
+  * "pallas_fused"
+              -- same batched multiplication kernel, plus FUSED
+                 division-step kernels (kernels/fused.py): the glue
+                 arithmetic around each product of the shifted-inverse
+                 Newton iteration (carry scans, shifts, prec, PowDiff
+                 sign/magnitude select, quotient correction) executes
+                 in-kernel on the VMEM-resident tiles, so one Refine
+                 iteration is 2 launches and the divmod / Barrett
+                 finalizations are 1 launch each (see `fused_step`,
+                 `fused_correct`, `fused_barrett` at the bottom).
+
 All are exact and validated against each other in tests.  Default
-dispatch: "pallas_batched" on TPU, "blocked" elsewhere (fast on CPU,
+dispatch: "pallas_fused" on TPU, "blocked" elsewhere (fast on CPU,
 where Pallas runs in interpret mode); `set_default_impl` overrides.
 """
 
@@ -45,7 +56,7 @@ import jax.custom_batching
 import jax.numpy as jnp
 
 from repro.core.bigint import LOG_BASE, MASK
-from repro.core.arith import mask_below
+from repro.core.arith import carry_scan, mask_below
 from . import ref as _ref
 
 _U = jnp.uint32
@@ -56,17 +67,17 @@ _I = jnp.int32
 # anti-diagonal accumulation well inside int32.
 BLOCK_T = 128
 
-IMPLS = ("scan", "blocked", "pallas", "pallas_batched")
+IMPLS = ("scan", "blocked", "pallas", "pallas_batched", "pallas_fused")
 
 # Resolved lazily so importing this module never forces backend init;
-# None means "pallas_batched on TPU, blocked elsewhere".
+# None means "pallas_fused on TPU, blocked elsewhere".
 DEFAULT_IMPL: str | None = None
 
 
 def default_impl() -> str:
     global DEFAULT_IMPL
     if DEFAULT_IMPL is None:
-        DEFAULT_IMPL = ("pallas_batched"
+        DEFAULT_IMPL = ("pallas_fused"
                         if jax.default_backend() == "tpu" else "blocked")
     return DEFAULT_IMPL
 
@@ -111,14 +122,7 @@ def _resolve8(raw: jax.Array, passes: int = 4) -> jax.Array:
         e = d + shift1(c)
     gen = (e >> 8).astype(_I)               # in {0,1}
     prop = ((e & _U(0xFF)) == _U(0xFF)).astype(_I)
-
-    def op(a, b):
-        ga, pa = a
-        gb, pb = b
-        return gb | (pb & ga), pa & pb
-    g, _ = jax.lax.associative_scan(op, (gen, prop), axis=-1)
-    carry = jnp.concatenate(
-        [jnp.zeros(g.shape[:-1] + (1,), _I), g[..., :-1]], axis=-1).astype(_U)
+    carry = carry_scan(gen, prop, axis=-1).astype(_U)
     return (e + carry) & _U(0xFF)
 
 
@@ -238,7 +242,10 @@ def mul(u: jax.Array, v: jax.Array, out_width: int,
     if impl == "pallas":
         from . import bigmul
         return bigmul.mul_pallas(u, v, out_width)
-    if impl == "pallas_batched":
+    if impl in ("pallas_batched", "pallas_fused"):
+        # "pallas_fused" only changes the DIVISION-STEP entry points
+        # (fused_step / fused_correct / fused_barrett below); a bare
+        # product is the same natively batched kernel either way.
         return _mul_pallas_batched_cv(out_width)(u, v)
     raise ValueError(f"unknown impl {impl!r}; expected one of {IMPLS}")
 
@@ -251,7 +258,7 @@ def mul_batch(u: jax.Array, v: jax.Array, out_width: int,
     batch as the leading grid axis); other impls fall back to vmap.
     """
     impl = impl or default_impl()
-    if impl == "pallas_batched":
+    if impl in ("pallas_batched", "pallas_fused"):
         from . import bigmul
         return bigmul.mul_pallas_batched(u, v, out_width)
     return jax.vmap(lambda a, b: mul(a, b, out_width, impl=impl))(u, v)
@@ -271,3 +278,66 @@ def mul_jit(u, v, out_width: int, impl: str | None = None):
 @partial(jax.jit, static_argnames=("out_width", "impl"))
 def mul_batch_jit(u, v, out_width: int, impl: str | None = None):
     return mul_batch(u, v, out_width, impl=impl)
+
+
+# ---------------------------------------------------------------------------
+# fused division-step registry (kernels/fused.py)
+#
+# One Refine iteration of the shifted-inverse Newton loop is
+#   PowDiff product + sign/magnitude select + w*x product + shift/add/
+#   sub + floor correction
+# and the paper's CUDA implementation fuses ALL of that into the same
+# kernels that do the multiplications (which is why its cost model can
+# count multiplications only).  These entry points are the JAX
+# analogue: with impl="pallas_fused" each of them compiles to batched
+# Pallas launches with the glue arithmetic executed in-kernel on the
+# VMEM-resident tiles (fused_step: 2 launches, fused_correct /
+# fused_barrett: 1 launch each); with any other impl they fall back to
+# the reference composition (K.mul products + core.arith glue in XLA,
+# ~15 full-width ops per step).
+# ---------------------------------------------------------------------------
+
+def fused_step(v, w, *, h, m, l, s, active, g: int, win: int,
+               impl: str | None = None):
+    """One guarded Refine iteration on the full-width iterate.
+
+    v, w: (W,) limb vectors (w is the current iterate, already guard-
+    shifted); h/m/l/s traced int32 scalars, `active` a traced bool,
+    `g` the static guard digit count, `win` the static window width of
+    this iteration (win == W when not windowed).  Returns the updated
+    full-width iterate (the -1 normalization shift and the
+    active-instance select are folded in).  Batch with jax.vmap: the
+    pallas_fused path routes the whole batch into 2 native launches.
+    """
+    from . import fused
+    impl = impl or default_impl()
+    if impl == "pallas_fused":
+        return fused.step_pallas(v, w, h=h, m=m, l=l, s=s, active=active,
+                                 g=g, win=win)
+    return fused.step_reference(v, w, h=h, m=m, l=l, s=s, active=active,
+                                g=g, win=win, impl=impl)
+
+
+def fused_correct(u, v, si, *, h, impl: str | None = None):
+    """divmod finalization: q = floor(u * si / B^h), mm = v*q, then the
+    delta in {-1,0,+1} compare-and-correct.  u, v, si: (W,) limbs, h a
+    traced int32 scalar.  Returns (q, r) at width W; divides by zero as
+    the documented total extension (q, r) = (0, u).  One batched Pallas
+    launch under impl="pallas_fused"."""
+    from . import fused
+    impl = impl or default_impl()
+    if impl == "pallas_fused":
+        return fused.correct_pallas(u, v, si, h=h)
+    return fused.correct_reference(u, v, si, h=h, impl=impl)
+
+
+def fused_barrett(x, mu, v, *, h: int, impl: str | None = None):
+    """Barrett reduction core: two truncated products + two conditional
+    subtracts at STATIC shift h.  x, mu, v: (W,) limbs.  Returns r at
+    width W (caller slices to the modulus width).  One batched Pallas
+    launch under impl="pallas_fused"."""
+    from . import fused
+    impl = impl or default_impl()
+    if impl == "pallas_fused":
+        return fused.barrett_pallas(x, mu, v, h=h)
+    return fused.barrett_reference(x, mu, v, h=h, impl=impl)

@@ -26,10 +26,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 class KernelPlan(NamedTuple):
     """Kernel geometry for one (bucket, precision) pair."""
     impl: str          # resolved multiplication impl
-    block_b: int       # instances per grid step (1 unless pallas_batched)
+    block_b: int       # instances per grid step (1 unless batched pallas)
     grid_rows: int     # leading (batch) grid rows per launch
     grid_pairs: int    # scheduled (i, j) block pairs of the dominant
                        # full-width product at this precision
+    fused: bool = False        # division glue executes in-kernel
+    step_launches: int = 0     # kernel launches per Refine iteration
+    step_glue_ops: int = 0     # full-width XLA glue ops per iteration
 
 
 def kernel_plan(bucket: int, w_limbs: int,
@@ -39,17 +42,32 @@ def kernel_plan(bucket: int, w_limbs: int,
 
     Single source of truth is the kernel itself: block_b comes from
     `bigmul.pick_block_b`, the pair count from the same ceil-division
-    blocking the kernel schedule uses, so the plan is exactly what a
-    launch at this (bucket, precision) will execute.
+    blocking the kernel schedule uses, and the fused-step geometry
+    (launches vs XLA glue ops per Refine iteration) from the
+    kernels/fused.py accounting constants, so the plan is exactly what
+    a launch at this (bucket, precision) will execute.
     """
     from repro.kernels import ops as K
-    from repro.kernels import bigmul
+    from repro.kernels import bigmul, fused
     impl = impl or K.default_impl()
     nb = max(-(-2 * w_limbs // K.BLOCK_T), 1)    # sub-digit blocks/operand
+    if impl == "pallas_fused":
+        bb = bigmul.pick_block_b(bucket)
+        return KernelPlan(impl, bb, -(-bucket // bb), nb * nb,
+                          fused=True,
+                          step_launches=fused.FUSED_STEP_LAUNCHES,
+                          step_glue_ops=0)
     if impl == "pallas_batched":
         bb = bigmul.pick_block_b(bucket)
-        return KernelPlan(impl, bb, -(-bucket // bb), nb * nb)
-    return KernelPlan(impl, 1, bucket, nb * nb)
+        return KernelPlan(impl, bb, -(-bucket // bb), nb * nb,
+                          fused=False, step_launches=2,
+                          step_glue_ops=fused.UNFUSED_STEP_GLUE_OPS)
+    # "pallas" still launches its 2 per-lane mul kernels each
+    # iteration; "scan"/"blocked" run everything as XLA ops.
+    return KernelPlan(impl, 1, bucket, nb * nb,
+                      fused=False,
+                      step_launches=2 if impl == "pallas" else 0,
+                      step_glue_ops=fused.UNFUSED_STEP_GLUE_OPS)
 
 
 class Batcher:

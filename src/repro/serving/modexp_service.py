@@ -30,8 +30,10 @@ class ModArithService:
 
     m_limbs:    storage width of moduli/residues (values < B^m_limbs)
     e_limbs:    storage width of modexp exponents (default m_limbs)
-    impl:       multiplication kernel ("scan" | "blocked" | "pallas" |
-                "pallas_batched"; None = backend default)
+    impl:       kernel path ("scan" | "blocked" | "pallas" |
+                "pallas_batched" | "pallas_fused"; None = backend
+                default -- pallas_fused on TPU runs each Barrett
+                reduction as ONE fused launch, see kernels/fused.py)
     windowed:   size-bucketed Newton refinement in the precompute
     window_bits: modexp ladder window (must divide 16)
     max_cached_moduli: LRU bound on device-resident contexts

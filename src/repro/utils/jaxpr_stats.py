@@ -1,0 +1,76 @@
+"""Backend-independent launch/op accounting over traced jaxprs.
+
+The fusion work (kernels/fused.py) is judged by a STRUCTURAL metric --
+how many kernel launches and full-width XLA ops one division step
+issues -- which, unlike wall time, is meaningful on any backend
+(including the CPU interpret mode CI runs in).  These helpers walk a
+ClosedJaxpr recursively (through pjit / scan / cond / custom_vmap
+sub-jaxprs) and count primitives, so benchmarks/div_breakdown.py and
+tests/test_fused.py can assert "one Refine iteration == 2 Pallas
+launches" directly on the traced program.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+
+import jax
+
+
+def _sub_jaxprs(params):
+    """Yield every (Closed)Jaxpr reachable from an eqn's params."""
+    for val in params.values():
+        vals = val if isinstance(val, (list, tuple)) else (val,)
+        for v in vals:
+            if isinstance(v, jax.core.ClosedJaxpr):
+                yield v.jaxpr
+            elif isinstance(v, jax.core.Jaxpr):
+                yield v
+
+
+def iter_eqns(jaxpr, into_kernels: bool = True):
+    """Depth-first iteration over all eqns, including nested jaxprs.
+
+    into_kernels=False stops at pallas_call boundaries: the kernel eqn
+    itself is yielded (it is one launch) but its body -- which executes
+    inside the kernel, not as XLA ops -- is not walked."""
+    if isinstance(jaxpr, jax.core.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if not into_kernels and eqn.primitive.name == "pallas_call":
+            continue
+        for sub in _sub_jaxprs(eqn.params):
+            yield from iter_eqns(sub, into_kernels)
+
+
+def primitive_counts(jaxpr) -> Counter:
+    """Counter of primitive names over the whole (nested) jaxpr."""
+    return Counter(eqn.primitive.name for eqn in iter_eqns(jaxpr))
+
+
+def count_primitive(jaxpr, name: str) -> int:
+    return sum(1 for eqn in iter_eqns(jaxpr) if eqn.primitive.name == name)
+
+
+def pallas_launches(jaxpr) -> int:
+    """Number of Pallas kernel launches in the traced program."""
+    return count_primitive(jaxpr, "pallas_call")
+
+
+def total_eqns(jaxpr) -> int:
+    """Total primitive count including in-kernel bodies."""
+    return sum(1 for _ in iter_eqns(jaxpr))
+
+
+def xla_eqns(jaxpr) -> int:
+    """Primitive count OUTSIDE kernel bodies: a proxy for XLA op
+    dispatches (the glue the fusion removes).  Each pallas_call counts
+    as one."""
+    return sum(1 for _ in iter_eqns(jaxpr, into_kernels=False))
+
+
+def trace_counts(fn, *args, **kwargs):
+    """(pallas_launches, xla_eqns) of fn traced on the given args."""
+    jx = jax.make_jaxpr(lambda *a: fn(*a, **kwargs))(*args)
+    return pallas_launches(jx), xla_eqns(jx)
