@@ -21,11 +21,20 @@ trip; the launch/op counts above are the backend-independent
 evidence).  Rows merge deterministically into BENCH_div.json keyed by
 (bits, batch, impl); re-runs update in place, the file stays sorted.
 
+For impl="pallas_fused" each row also records which fused-kernel
+GENERATION the size dispatches to (`fused_path`: "unrolled" below the
+VMEM/compile threshold, "grid" above -- see kernels/ops.fused_path)
+and, on the grid path, the phase-tape geometry of the finalization
+kernel (grid_steps, super_tile, revisit_passes from fused.grid_plan).
+
 Usage:
   PYTHONPATH=src python benchmarks/div_breakdown.py            # dev sizes
   PYTHONPATH=src python benchmarks/div_breakdown.py --smoke    # CI gate
   PYTHONPATH=src python benchmarks/div_breakdown.py --counts-only \
       --log2bits 8 9 10 11 12 13 14 15   # structural sweep, no execution
+  PYTHONPATH=src python benchmarks/div_breakdown.py --paper-range \
+      # the paper's 2^15..2^18-bit Table 1 range: structural sweep of
+      # the grid-scheduled fused path, merged into BENCH_div.json
 """
 
 from __future__ import annotations
@@ -73,19 +82,35 @@ def iters_for(m: int) -> int:
     return S.refine_iters(m)     # single source of truth: core/shinv.py
 
 
-def structural_counts(m: int, batch: int, impl: str):
+def structural_counts(m: int, batch: int, impl: str, windowed: bool = True):
     """(launches, launches_per_iter, xla_ops) for divmod_batch traced
     at (batch, m) -- no compilation or execution."""
     u = jnp.zeros((batch, m), jnp.uint32)
     v = jnp.zeros((batch, m), jnp.uint32)
     launches, xla_ops = JS.trace_counts(
-        lambda a, b: S.divmod_batch(a, b, impl=impl), u, v)
+        lambda a, b: S.divmod_batch(a, b, impl=impl, windowed=windowed),
+        u, v)
     it = iters_for(m)
     w = m + S.PAD
     sh_launches, _ = JS.trace_counts(
-        lambda a, b: S.shinv_batch(a, b, iters_max=it, impl=impl),
+        lambda a, b: S.shinv_batch(a, b, iters_max=it, impl=impl,
+                                   windowed=windowed),
         jnp.zeros((batch, w), jnp.uint32), jnp.zeros((batch,), jnp.int32))
     return launches, sh_launches / it, xla_ops
+
+
+def fused_geometry(m: int) -> dict:
+    """Which fused-kernel generation an m-limb division dispatches to,
+    plus the grid phase-tape geometry of its finalization kernel."""
+    from repro.kernels import fused as F
+    w = m + S.PAD
+    path = F.correct_dispatch(w)[0]
+    out = {"fused_path": path}
+    if path == "grid":
+        steps, s_tile, passes = F.grid_plan(w)
+        out.update({"grid_steps": steps, "super_tile": s_tile,
+                    "revisit_passes": passes})
+    return out
 
 
 def run(log2bits, batches, impls, reps=3, validate=True, out_path=None,
@@ -111,6 +136,8 @@ def run(log2bits, batches, impls, reps=3, validate=True, out_path=None,
                     "backend": jax.default_backend(),
                     "schema": _SCHEMA,
                 }
+                if impl == "pallas_fused":
+                    row.update(fused_geometry(m))
                 if not counts_only:
                     total_fn = jax.jit(lambda a, b, i=impl: S.divmod_batch(
                         a, b, impl=i))
@@ -142,6 +169,11 @@ def run(log2bits, batches, impls, reps=3, validate=True, out_path=None,
                        f"launches={launches:3d} "
                        f"({row['launches_per_iter']:.1f}/iter) "
                        f"xla_ops={xla_ops:5d}")
+                if "fused_path" in row:
+                    msg += f"  path={row['fused_path']}"
+                    if row["fused_path"] == "grid":
+                        msg += (f" (tape={row['grid_steps']} "
+                                f"tile={row['super_tile']})")
                 if not counts_only:
                     msg += (f"  total={row['total_ms']:10.1f} ms "
                             f"(shinv {row['shinv_ms']:.1f})"
@@ -173,30 +205,42 @@ def merge_json(path, rows):
 
 def _smoke(out_path):
     """CI gate: tiny sizes, exactness + bit-equivalence + the <= 2
-    launches/iteration fusion contract."""
+    launches/iteration fusion contract, for BOTH fused-kernel
+    generations (the grid-scheduled path is forced via the dispatch
+    threshold override so it runs at smoke sizes)."""
+    from repro.kernels import ops as KO
     rng = np.random.default_rng(7)
     m, batch = 16, 4            # 256-bit operands
     u, v, us, vs = _make_batch(rng, m, batch)
-    qf, rf = jax.block_until_ready(
-        S.divmod_batch(u, v, impl="pallas_fused"))
     qb, rb = jax.block_until_ready(
         S.divmod_batch(u, v, impl="blocked"))
-    if not (np.array_equal(np.asarray(qf), np.asarray(qb))
-            and np.array_equal(np.asarray(rf), np.asarray(rb))):
-        raise SystemExit("fused/unfused bit-equivalence FAILED")
-    qs, rs = bi.batch_to_ints(np.asarray(qf)), bi.batch_to_ints(np.asarray(rf))
-    if not all((qq, rr) == divmod(x, y)
-               for x, y, qq, rr in zip(us, vs, qs, rs)):
-        raise SystemExit("exactness check FAILED")
-    launches, lpi, _ = structural_counts(m, batch, "pallas_fused")
-    if lpi > 2:
-        raise SystemExit(f"fusion contract FAILED: {lpi} launches/iter > 2")
-    if launches != 2 * iters_for(m) + 1:
-        raise SystemExit(f"unexpected launch count {launches}")
+    for forced, label in ((None, "unrolled"), (1, "grid")):
+        KO.set_fused_grid_threshold(forced)
+        try:
+            qf, rf = jax.block_until_ready(
+                S.divmod_batch(u, v, impl="pallas_fused"))
+            if not (np.array_equal(np.asarray(qf), np.asarray(qb))
+                    and np.array_equal(np.asarray(rf), np.asarray(rb))):
+                raise SystemExit(f"{label}: bit-equivalence FAILED")
+            qs = bi.batch_to_ints(np.asarray(qf))
+            rs = bi.batch_to_ints(np.asarray(rf))
+            if not all((qq, rr) == divmod(x, y)
+                       for x, y, qq, rr in zip(us, vs, qs, rs)):
+                raise SystemExit(f"{label}: exactness check FAILED")
+            launches, lpi, _ = structural_counts(m, batch, "pallas_fused")
+            if lpi > 2:
+                raise SystemExit(
+                    f"{label}: fusion contract FAILED: {lpi} > 2/iter")
+            if launches != 2 * iters_for(m) + 1:
+                raise SystemExit(
+                    f"{label}: unexpected launch count {launches}")
+            print(f"smoke[{label}]: bit-equal, exact, "
+                  f"{lpi:.1f} launches/iter (total {launches})")
+        finally:
+            KO.set_fused_grid_threshold(None)
     rows = run([8, 9], [batch], ["pallas_fused", "blocked"],
                counts_only=True, out_path=None)
-    print(f"smoke OK: bit-equal, exact, {lpi:.1f} launches/iter "
-          f"(total {launches})")
+    print("smoke OK")
     return rows
 
 
@@ -216,11 +260,19 @@ def main(argv=None):
     ap.add_argument("--counts-only", action="store_true",
                     help="structural launch/op counts only (trace, no "
                          "execution -- fast at any precision)")
+    ap.add_argument("--paper-range", action="store_true",
+                    help="the paper's 2^15..2^18-bit Table 1 range: "
+                         "structural sweep of the grid-scheduled fused "
+                         "path (implies --counts-only)")
     ap.add_argument("--no-validate", dest="validate", action="store_false")
     args = ap.parse_args(argv)
 
     if args.smoke:
         return _smoke(os.path.normpath(args.out))
+    if args.paper_range:
+        args.log2bits = [15, 16, 17, 18]
+        args.impls = ["pallas_fused"]
+        args.counts_only = True
 
     out_path = os.path.normpath(args.out)
     rows = run(args.log2bits, args.batches, args.impls, reps=args.reps,

@@ -55,6 +55,43 @@ def make_dataset(rng, m, insts):
             jnp.asarray(bi.batch_from_ints(vs, m)), us, vs)
 
 
+def _db():
+    """Import the sibling div_breakdown benchmark (shared structural
+    counters and the deterministic JSON writer)."""
+    import sys
+    d = os.path.dirname(os.path.abspath(__file__))
+    if d not in sys.path:
+        sys.path.insert(0, d)
+    import div_breakdown
+    return div_breakdown
+
+
+def run_counts(sizes, impl="pallas_fused", windowed=True):
+    """Structural sweep (trace only, no execution): Pallas launches and
+    XLA glue ops of one batched division per size, plus the fused
+    generation dispatch (`fused_path`) and grid phase-tape geometry.
+    This is how the paper's 2^15..2^18-bit range is characterized on
+    backends where wall time would measure the interpreter."""
+    DB = _db()
+    rows = []
+    for bits in sizes:
+        m = bi.width_for_bits(bits)
+        insts = min(max(BUDGET_BITS // bits, 4), MAX_INSTS)
+        launches, lpi, xla_ops = DB.structural_counts(m, insts, impl,
+                                                      windowed=windowed)
+        row = {"bits": bits, "insts": insts, "impl": impl,
+               "windowed": windowed, "iters": S.refine_iters(m),
+               "launches": launches, "launches_per_iter": round(lpi, 2),
+               "xla_ops": xla_ops}
+        if impl == "pallas_fused":
+            row.update(DB.fused_geometry(m))
+        rows.append(row)
+        print(f"bits={bits} insts={insts} {impl}: launches={launches} "
+              f"({lpi:.1f}/iter) xla_ops={xla_ops} "
+              f"{row.get('fused_path', '')}", flush=True)
+    return rows
+
+
 def run(sizes=(2 ** 10, 2 ** 12, 2 ** 14, 2 ** 16), validate=True,
         impl="blocked", windowed=True):
     """Per-size mul vs div timings.  `sizes` may extend to the paper's
@@ -113,6 +150,9 @@ def main(argv=None):
                     choices=list(K.IMPLS))
     ap.add_argument("--no-windowed", dest="windowed", action="store_false")
     ap.add_argument("--no-validate", dest="validate", action="store_false")
+    ap.add_argument("--counts-only", action="store_true",
+                    help="structural launch/op sweep (trace only; how "
+                         "the 2^15..2^18 fused range is recorded)")
     ap.add_argument("--json", default=None, metavar="PATH",
                     help="append rows to a JSON file (keyed by "
                          "bits/impl/windowed, rewritten sorted)")
@@ -120,18 +160,22 @@ def main(argv=None):
     if args.paper_range:
         args.sizes = [2 ** 15, 2 ** 16, 2 ** 17, 2 ** 18]
 
-    rows = run(sizes=args.sizes, validate=args.validate, impl=args.impl,
-               windowed=args.windowed)
-    print("bits,insts,impl,windowed,mul_ms,div_ms,div_over_mul,"
-          "py_int_ms,exact")
-    for r in rows:
-        print(f"{r['bits']},{r['insts']},{r['impl']},{r['windowed']},"
-              f"{r['mul_ms']:.1f},{r['div_ms']:.1f},"
-              f"{r['div_over_mul']:.2f},{r['py_int_ms']:.1f},{r['exact']}")
-    assert all(r["exact"] for r in rows)
+    if args.counts_only:
+        rows = run_counts(args.sizes, impl=args.impl,
+                          windowed=args.windowed)
+    else:
+        rows = run(sizes=args.sizes, validate=args.validate,
+                   impl=args.impl, windowed=args.windowed)
+        print("bits,insts,impl,windowed,mul_ms,div_ms,div_over_mul,"
+              "py_int_ms,exact")
+        for r in rows:
+            print(f"{r['bits']},{r['insts']},{r['impl']},{r['windowed']},"
+                  f"{r['mul_ms']:.1f},{r['div_ms']:.1f},"
+                  f"{r['div_over_mul']:.2f},{r['py_int_ms']:.1f},"
+                  f"{r['exact']}")
+        assert all(r["exact"] for r in rows)
     if args.json:
-        import sys
-        sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+        _db()                                 # ensures sibling imports work
         from bigmul_sweep import merge_json   # the deterministic writer
         # merge_json keys on (bits, batch, impl); a "table1:" namespace
         # (plus a windowed tag) keeps these rows from colliding with

@@ -46,7 +46,17 @@ paths execute each truncated multiplication as one natively batched
 kernel launch across the whole request batch.  With "pallas_fused"
 (the TPU default) the whole `barrett_reduce` core -- both truncated
 products AND the conditional subtracts -- is ONE batched launch
-(`K.fused_barrett`, kernels/fused.py).
+(`K.fused_barrett`, kernels/fused.py); that single-launch contract
+holds at every modulus size, because past ~2^13-bit working widths
+the fused kernel switches to its grid-scheduled generation (pair axis
+on the Pallas grid, bounded per-step VMEM) instead of unrolling.
+
+Module contract: `barrett_reduce` requires x < B^(2m) (ValueError
+above), is exact for any modulus v >= 1, and a context is only valid
+for the modulus it was precomputed from; `modexp`'s trip count is
+data-independent (constant-time-shaped).  v == 0 is the caller's to
+reject -- `barrett_precompute` documents v >= 1 (the serving layer
+raises before building a context).
 """
 
 from __future__ import annotations

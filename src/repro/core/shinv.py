@@ -34,6 +34,13 @@ JAX adaptation notes (vs. the CUDA implementation in the paper):
     ONE; other impls run the reference composition (K.mul products +
     arith glue in XLA, ~15 full-width ops per step).  Both paths are
     bit-identical (tests/test_fused.py).
+  * Launch-count contract: `divmod_batch(impl="pallas_fused")` is
+    exactly 2 * refine_iters(m) + 1 pallas_calls at EVERY precision --
+    below ~2^13-bit operands the fused kernels unroll their products
+    in-kernel, above that the same launches run grid-scheduled with a
+    bounded per-step VMEM tile (kernels/ops.fused_path dispatches;
+    tests/test_grid_fused.py asserts the contract on both
+    generations).
 
 Sign handling and the delta in {-1,0,+1} quotient correction follow the
 paper's revised Theorem 2.

@@ -40,6 +40,14 @@ multi-precision product:
                  iteration is 2 launches and the divmod / Barrett
                  finalizations are 1 launch each (see `fused_step`,
                  `fused_correct`, `fused_barrett` at the bottom).
+                 Within this impl, `fused_path` auto-dispatches each
+                 kernel between the UNROLLED generation (whole product
+                 in one kernel body; VMEM assumption: ~2^13-bit
+                 operands max) and the GRID-SCHEDULED generation (pair
+                 axis on the Pallas grid, bounded per-step tile; the
+                 paper's 2^15..2^18-bit range) -- launch counts are
+                 identical, the threshold is overridable via
+                 `set_fused_grid_threshold`.
 
 All are exact and validated against each other in tests.  Default
 dispatch: "pallas_fused" on TPU, "blocked" elsewhere (fast on CPU,
@@ -87,6 +95,82 @@ def set_default_impl(name: str) -> None:
     if name not in IMPLS:
         raise ValueError(f"unknown impl {name!r}; expected one of {IMPLS}")
     DEFAULT_IMPL = name
+
+
+# ---------------------------------------------------------------------------
+# fused-kernel generation dispatch (unrolled vs grid-scheduled)
+#
+# The fused division-step kernels come in two generations
+# (kernels/fused.py): the UNROLLED kernels keep the whole block-pair
+# product in one kernel body (fast through ~2^13-bit operands; compile
+# time and VMEM grow quadratically with precision), the GRID-SCHEDULED
+# kernels put the pair axis on the Pallas grid with a scratch diagonal
+# accumulator and a final glue revisit pass (O(1) compile, bounded
+# per-step VMEM -- the paper's 2^15..2^18-bit range).  `fused_path`
+# picks per static product geometry; both generations are bit-exact,
+# so the choice is purely a compile-time/VMEM tradeoff.
+# ---------------------------------------------------------------------------
+
+# Unrolled-path ceilings, derived from hardware budgets:
+#  * pairs: every (i, j) block pair is a dot_general unrolled in the
+#    kernel body; past ~256 the Mosaic compile time dominates.
+#  * VMEM: the unrolled body keeps ~12 full-width limb arrays plus ~6
+#    sub-digit-width arrays (operands, diagonal tiles, resolve
+#    temporaries) live per instance, and the batched launch runs up to
+#    MAX_BLOCK_B = 16 instances per grid step; the estimate must fit
+#    in half a ~16 MiB TPU core, leaving the other half as slack.
+FUSED_UNROLL_MAX_PAIRS = 256
+FUSED_VMEM_BUDGET = 8 << 20
+_FUSED_LIMB_BUFS = 12
+_FUSED_SUB_BUFS = 6
+
+# Manual override: None = derive from the budgets above; an int makes
+# the decision a pure out_width cutoff (out_width > threshold -> grid),
+# which tests use to exercise the grid kernels at tiny sizes.
+_FUSED_GRID_THRESHOLD: int | None = None
+
+
+def set_fused_grid_threshold(out_limbs: int | None) -> None:
+    """Override the unrolled->grid dispatch: products with out_width >
+    out_limbs take the grid-scheduled kernels.  None restores the
+    automatic VMEM/compile-time derivation.
+
+    Changing the threshold clears jax's compilation caches: the
+    dispatch is resolved at trace time, so executables traced under
+    the previous threshold would otherwise keep their old kernel
+    generation on cache hits (same shapes/statics)."""
+    global _FUSED_GRID_THRESHOLD
+    if out_limbs != _FUSED_GRID_THRESHOLD:
+        _FUSED_GRID_THRESHOLD = out_limbs
+        jax.clear_caches()
+
+
+def fused_grid_threshold() -> int | None:
+    return _FUSED_GRID_THRESHOLD
+
+
+def fused_path(out_width: int, cu: int, cv: int, pg: int) -> str:
+    """"unrolled" or "grid" for a fused kernel whose dominant product
+    is (cu x cv limbs) truncated to out_width, padded to pg limbs.
+
+    Counts the dot_generals the unrolled body would emit from the same
+    tile derivation the kernels use (`fused._prod_tiles`, the `_k_mul`
+    clipping/pruning schedule), and estimates its VMEM-resident bytes
+    at the maximum batch block; either budget overrun dispatches to
+    the grid generation.
+    """
+    if _FUSED_GRID_THRESHOLD is not None:
+        return "grid" if out_width > _FUSED_GRID_THRESHOLD else "unrolled"
+    from . import bigmul, fused
+    t = BLOCK_T
+    nu, nv, d_keep = fused._prod_tiles(out_width, cu, cv)
+    pairs = sum(max(0, min(nv, d_keep - i)) for i in range(nu))
+    if pairs > FUSED_UNROLL_MAX_PAIRS:
+        return "grid"
+    n8r = (min(nu + nv - 1, d_keep) + 1) * t
+    est = 4 * bigmul.MAX_BLOCK_B * (_FUSED_LIMB_BUFS * pg
+                                    + _FUSED_SUB_BUFS * n8r)
+    return "grid" if est > FUSED_VMEM_BUDGET else "unrolled"
 
 
 # ---------------------------------------------------------------------------

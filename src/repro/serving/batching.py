@@ -12,7 +12,13 @@ trimmed back to the true request size.  This module owns that pattern.
 impl and the grid shape the natively batched Pallas kernel will launch
 (instances per grid step x scheduled block pairs), mirroring
 `kernels.bigmul.pick_block_b` / `_pair_schedule_pruned` so services
-can record and expose their per-bucket kernel geometry.
+can record and expose their per-bucket kernel geometry.  For
+impl="pallas_fused" the plan additionally records which fused-kernel
+GENERATION the precision dispatches to (`grid_scheduled`, from
+`kernels.ops.fused_path`) and, on the grid path, the phase-tape
+geometry (`grid_steps`, `super_tile`, `revisit_passes`, from
+`kernels.fused.grid_plan`) -- the knobs that bound VMEM and compile
+time at the paper's 2^15..2^18-bit precisions.
 """
 
 from __future__ import annotations
@@ -33,6 +39,11 @@ class KernelPlan(NamedTuple):
     fused: bool = False        # division glue executes in-kernel
     step_launches: int = 0     # kernel launches per Refine iteration
     step_glue_ops: int = 0     # full-width XLA glue ops per iteration
+    grid_scheduled: bool = False  # fused pair axis on the Pallas grid
+    grid_steps: int = 0        # phase-tape length of the finalization
+                               # kernel (pair steps + revisit passes)
+    super_tile: int = 0        # per-step product tile, in sub-digits
+    revisit_passes: int = 0    # stage/glue revisit passes per launch
 
 
 def kernel_plan(bucket: int, w_limbs: int,
@@ -42,10 +53,12 @@ def kernel_plan(bucket: int, w_limbs: int,
 
     Single source of truth is the kernel itself: block_b comes from
     `bigmul.pick_block_b`, the pair count from the same ceil-division
-    blocking the kernel schedule uses, and the fused-step geometry
+    blocking the kernel schedule uses, the fused-step geometry
     (launches vs XLA glue ops per Refine iteration) from the
-    kernels/fused.py accounting constants, so the plan is exactly what
-    a launch at this (bucket, precision) will execute.
+    kernels/fused.py accounting constants, and the unrolled-vs-grid
+    generation plus its phase-tape geometry from `ops.fused_path` /
+    `fused.grid_plan`, so the plan is exactly what a launch at this
+    (bucket, precision) will execute.
     """
     from repro.kernels import ops as K
     from repro.kernels import bigmul, fused
@@ -53,10 +66,15 @@ def kernel_plan(bucket: int, w_limbs: int,
     nb = max(-(-2 * w_limbs // K.BLOCK_T), 1)    # sub-digit blocks/operand
     if impl == "pallas_fused":
         bb = bigmul.pick_block_b(bucket)
+        grid = fused.correct_dispatch(w_limbs)[0] == "grid"
+        steps, s_tile, passes = (fused.grid_plan(w_limbs) if grid
+                                 else (0, 0, 0))
         return KernelPlan(impl, bb, -(-bucket // bb), nb * nb,
                           fused=True,
                           step_launches=fused.FUSED_STEP_LAUNCHES,
-                          step_glue_ops=0)
+                          step_glue_ops=0,
+                          grid_scheduled=grid, grid_steps=steps,
+                          super_tile=s_tile, revisit_passes=passes)
     if impl == "pallas_batched":
         bb = bigmul.pick_block_b(bucket)
         return KernelPlan(impl, bb, -(-bucket // bb), nb * nb,

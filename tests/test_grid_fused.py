@@ -1,0 +1,210 @@
+"""Grid-scheduled fused division kernels vs the unrolled generation
+and the reference composition: size-based dispatch boundary, bit-
+equivalence on both sides of the threshold, launch-count contracts,
+and the KernelPlan geometry record.
+
+The grid kernels exist for the paper's 2^15..2^18-bit range, where the
+unrolled kernels' compile time and VMEM blow up; their correctness is
+size-independent, so these tests force the dispatch threshold DOWN via
+`ops.set_fused_grid_threshold` and exercise the full phase-tape
+machinery (stage / pair / glue revisit passes, two-product kernels) at
+CI-feasible widths.  The actual 2^15-bit exactness run is recorded in
+EXPERIMENTS.md; tier-1 covers the largest CI-feasible precision below.
+"""
+
+import random
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import bigint as bi
+from repro.core import modarith as MA
+from repro.core import shinv as S
+from repro.kernels import ops as K
+from repro.kernels import fused as F
+from repro.utils import jaxpr_stats as JS
+
+B = bi.BASE
+
+
+@pytest.fixture
+def grid_forced():
+    """Force every fused product onto the grid-scheduled kernels."""
+    K.set_fused_grid_threshold(1)
+    yield
+    K.set_fused_grid_threshold(None)
+
+
+def _cmp_divmod(us, vs, m, windowed=True):
+    u = jnp.asarray(bi.batch_from_ints(us, m))
+    v = jnp.asarray(bi.batch_from_ints(vs, m))
+    qf, rf = S.divmod_batch(u, v, impl="pallas_fused", windowed=windowed)
+    qb, rb = S.divmod_batch(u, v, impl="blocked", windowed=windowed)
+    np.testing.assert_array_equal(np.asarray(qf), np.asarray(qb))
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(rb))
+    for x, y, qq, rr in zip(us, vs, bi.batch_to_ints(qf),
+                            bi.batch_to_ints(rf)):
+        assert (qq, rr) == (divmod(x, y) if y else (0, x)), (x, y)
+
+
+# ---------------------------------------------------------------------------
+# the dispatch itself
+# ---------------------------------------------------------------------------
+
+def test_fused_path_default_boundary():
+    """Auto dispatch: unrolled through ~2^13-bit operands, grid from
+    2^14 up (the compile-time pairs budget is what flips first)."""
+    for m in (16, 256, 512 + S.PAD):                 # <= 2^13 bits
+        pg = -(-2 * m // 64) * 64
+        assert K.fused_path(2 * m, m, m, pg) == "unrolled", m
+    for m in (1024 + S.PAD, 2048 + S.PAD, 16384 + S.PAD):   # >= 2^14
+        pg = -(-2 * m // 64) * 64
+        assert K.fused_path(2 * m, m, m, pg) == "grid", m
+
+
+def test_fused_path_threshold_override():
+    try:
+        K.set_fused_grid_threshold(24)
+        assert K.fused_path(24, 12, 12, 64) == "unrolled"
+        assert K.fused_path(26, 13, 13, 64) == "grid"
+        assert K.fused_grid_threshold() == 24
+    finally:
+        K.set_fused_grid_threshold(None)
+    assert K.fused_grid_threshold() is None
+
+
+def test_dispatch_boundary_bit_equivalence():
+    """Divisions straddling an (overridden) threshold: m=4 stays on the
+    unrolled kernels, m=5 crosses onto the grid kernels; both must be
+    bit-identical to the reference composition."""
+    rnd = random.Random(11)
+    try:
+        K.set_fused_grid_threshold(24)   # correct out_width = 2*(m+PAD)
+        for m in (4, 5):
+            out_w = 2 * (m + S.PAD)
+            want = "unrolled" if out_w <= 24 else "grid"
+            pg = -(-out_w // 64) * 64
+            assert K.fused_path(out_w, m + S.PAD, m + S.PAD, pg) == want
+            us = [B ** m - 1] + [rnd.randint(0, B ** m - 1)
+                                 for _ in range(3)]
+            vs = [B ** (m // 2)] + [rnd.randint(1, B ** m - 1)
+                                    for _ in range(3)]
+            _cmp_divmod(us, vs, m)
+    finally:
+        K.set_fused_grid_threshold(None)
+
+
+# ---------------------------------------------------------------------------
+# grid kernels: bit-equivalence across the API surface
+# ---------------------------------------------------------------------------
+
+def test_grid_divmod_equivalence(grid_forced):
+    """Forced-grid divmod vs blocked, adversarial edges included
+    (all-0xFFFF, power-of-B divisor, u=0, zero divisor)."""
+    rnd = random.Random(3)
+    m = 4
+    us = [B ** m - 1, 0, rnd.randint(0, B ** m - 1), 5, B ** 2]
+    vs = [B ** (m // 2) - 1, 1, rnd.randint(1, B ** m - 1), 7, 0]
+    _cmp_divmod(us, vs, m)
+
+
+@pytest.mark.parametrize("win", [8, 16])
+def test_grid_step_matches_reference(grid_forced, win):
+    """K.fused_step on the grid kernels computes the same pure function
+    as the reference composition on arbitrary Newton states."""
+    import jax
+    rnd = random.Random(win)
+    w_full, batch, g = 16, 8, 2
+    vs = [B ** w_full - 1, 0] + [rnd.randint(0, B ** w_full - 1)
+                                 for _ in range(batch - 2)]
+    ws = [B ** win - 1, 0] + [rnd.randint(0, B ** win - 1)
+                              for _ in range(batch - 2)]
+    v = jnp.asarray(bi.batch_from_ints(vs, w_full))
+    w = jnp.asarray(bi.batch_from_ints(ws, w_full))
+    ls = jnp.asarray([rnd.randint(2, 5) for _ in range(batch)], jnp.int32)
+    ms = jnp.asarray([rnd.randint(0, 3) for _ in range(batch)], jnp.int32)
+    hs = jnp.asarray([rnd.randint(1, 2 * win - 1) for _ in range(batch)],
+                     jnp.int32)
+    ss = jnp.asarray([rnd.randint(0, 2) for _ in range(batch)], jnp.int32)
+    act = jnp.asarray([i % 3 != 0 for i in range(batch)])
+
+    def run(impl):
+        fn = jax.jit(jax.vmap(
+            lambda vv, ww, hh, mm, ll, sc, aa: K.fused_step(
+                vv, ww, h=hh, m=mm, l=ll, s=sc, active=aa, g=g, win=win,
+                impl=impl)))
+        return fn(v, w, hs, ms, ls, ss, act)
+
+    np.testing.assert_array_equal(np.asarray(run("pallas_fused")),
+                                  np.asarray(run("blocked")))
+
+
+def test_grid_barrett_equivalence(grid_forced):
+    rnd = random.Random(5)
+    m = 4
+    v = rnd.randint(2, B ** m - 1)
+    ctx = MA.barrett_precompute(jnp.asarray(bi.from_int(v, m)),
+                                impl="blocked")
+    xs = [B ** (2 * m) - 1, 0, v, v - 1, v + 1]
+    x = jnp.asarray(bi.batch_from_ints(xs, 2 * m))
+    rf = MA.reduce_shared_batch(ctx, x, impl="pallas_fused")
+    rb = MA.reduce_shared_batch(ctx, x, impl="blocked")
+    np.testing.assert_array_equal(np.asarray(rf), np.asarray(rb))
+    for xx, got in zip(xs, bi.batch_to_ints(rf)):
+        assert got == xx % v, (xx, v)
+
+
+@pytest.mark.slow
+def test_grid_all_ffff_largest_ci_feasible(grid_forced):
+    """All-0xFFFF edge at the largest precision tier-1 can afford on
+    the grid path (2^11 bits): maximal carry chains through every
+    phase-tape stage, checked against Python divmod and blocked."""
+    m = 128
+    us = [B ** m - 1]
+    vs = [B ** (m // 2) - 1]
+    _cmp_divmod(us, vs, m)
+
+
+# ---------------------------------------------------------------------------
+# structural contracts
+# ---------------------------------------------------------------------------
+
+def test_grid_launch_counts(grid_forced):
+    """The fusion contract survives grid scheduling: one pallas_call
+    per fused stage, so divmod_batch stays at 2*iters + 1 launches."""
+    m = 4
+    iters = S.refine_iters(m)
+    u = jnp.zeros((3, m), jnp.uint32)
+    n, _ = JS.trace_counts(
+        lambda a, b: S.divmod_batch(a, b, impl="pallas_fused"), u, u)
+    assert n == 2 * iters + 1
+
+
+def test_grid_geometry_exposed():
+    """grid_plan and the geometry helpers agree with the schedule the
+    kernels actually launch."""
+    full_w = 2056                                    # 2^15-bit operands
+    steps, s_tile, passes = F.grid_plan(full_w)
+    g, pairs1, pairs2, *_ = F._correct_grid_geom(full_w)
+    assert steps == len(pairs1) + len(pairs2) + passes
+    assert s_tile == g * K.BLOCK_T
+    assert passes == F.GRID_CORRECT_PASSES == 3
+    # the tape is bounded: this is the whole point of grid scheduling
+    assert steps < 5000
+    ph, ii, jj = F._grid_schedule(pairs1, pairs2)
+    assert len(ph) == steps and len(ii) == steps and len(jj) == steps
+    assert (ph == F.PH_STAGE).sum() == 1
+    assert (ph == F.PH_GLUE1).sum() == 1 and (ph == F.PH_GLUE2).sum() == 1
+
+
+def test_kernel_plan_records_grid_geometry():
+    from repro.serving import batching as BT
+    plan = BT.kernel_plan(16, 2056, "pallas_fused")    # 2^15 bits
+    assert plan.fused and plan.grid_scheduled
+    assert plan.step_launches == 2
+    assert plan.revisit_passes == F.GRID_CORRECT_PASSES
+    assert plan.grid_steps > 0 and plan.super_tile % K.BLOCK_T == 0
+    plan_small = BT.kernel_plan(16, 16, "pallas_fused")
+    assert plan_small.fused and not plan_small.grid_scheduled
+    assert plan_small.grid_steps == 0 and plan_small.super_tile == 0

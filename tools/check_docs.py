@@ -1,0 +1,91 @@
+"""Documentation link checker (CI `docs` job).
+
+Validates, over README.md and docs/*.md:
+
+  * relative markdown links `[text](path)` resolve to files/dirs in
+    the repo (external http(s)/mailto links are skipped, `#anchors`
+    are stripped);
+  * `file.py:symbol` cross-references in backticks resolve: the file
+    exists AND defines the symbol (`def symbol` / `class symbol` /
+    module attribute assignment).  These anchors are how
+    docs/algorithm.md ties the paper's algorithms to the implementing
+    functions, so they must not rot.
+
+Exit code 1 with a per-failure listing when anything is broken.
+
+Usage:  python tools/check_docs.py [files...]   (default: README + docs/)
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+
+MD_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE_REF = re.compile(r"`([\w./-]+\.py):([A-Za-z_][\w.]*)`")
+
+
+def _symbol_defined(py_path: pathlib.Path, symbol: str) -> bool:
+    """Is `symbol` (or its dotted head, for `Class.method`) defined at
+    any indentation in the file?"""
+    head = symbol.split(".")[0]
+    text = py_path.read_text()
+    pat = re.compile(
+        rf"^\s*(?:def|class)\s+{re.escape(head)}\b"
+        rf"|^{re.escape(head)}\s*(?::[^=]+)?=",
+        re.M)
+    return bool(pat.search(text))
+
+
+def check_file(md_path: pathlib.Path) -> list[str]:
+    errors = []
+    text = md_path.read_text()
+    for m in MD_LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:
+            continue
+        resolved = (md_path.parent / rel).resolve()
+        if not resolved.exists():
+            errors.append(f"{md_path}: broken link -> {target}")
+    for m in CODE_REF.finditer(text):
+        rel, symbol = m.groups()
+        py = (ROOT / rel).resolve()
+        if not py.exists():
+            # references may be repo-root-relative or src-relative
+            py = (ROOT / "src" / rel).resolve()
+        if not py.exists():
+            errors.append(f"{md_path}: missing file in ref `{rel}:{symbol}`")
+            continue
+        if not _symbol_defined(py, symbol):
+            errors.append(
+                f"{md_path}: `{rel}:{symbol}` -- symbol not defined")
+    return errors
+
+
+def main(argv=None) -> int:
+    args = (argv if argv is not None else sys.argv[1:])
+    if args:
+        files = [pathlib.Path(a) for a in args]
+    else:
+        files = [ROOT / "README.md"] + sorted((ROOT / "docs").glob("*.md"))
+    errors = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"{f}: file does not exist")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(e, file=sys.stderr)
+    print(f"checked {len(files)} files: "
+          f"{'FAILED' if errors else 'ok'} ({len(errors)} broken)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
