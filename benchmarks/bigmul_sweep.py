@@ -32,7 +32,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -43,10 +42,13 @@ import jax.numpy as jnp
 from repro.core import bigint as bi
 from repro.kernels import ops as K
 from repro.kernels import bigmul
+from repro.obs import costmodel as CM
+from repro.obs import report as RPT
+from repro.utils import jaxpr_stats as JS
 
 IMPLS = ("pallas_batched", "pallas_vmap", "blocked")
 
-_SCHEMA = 1   # bump when row fields change
+_SCHEMA = 2   # bump when row fields change (2: launches/model_launches)
 
 
 def _bench(fn, *args, reps=3):
@@ -97,6 +99,12 @@ def run(log2bits, batches, impls, reps=3, validate=True, out_path=None):
             u, v, xs, ys = _make_batch(rng, m, batch)
             for impl in impls:
                 fn = _runner(impl, wo)
+                # structural telemetry off the traced program: launches
+                # of one batched product vs the cost model's prediction
+                # (pallas_vmap is registry impl "pallas" under jax.vmap)
+                launches, xla_ops = JS.trace_counts(fn, u, v)
+                model = CM.mul_launches(
+                    "pallas" if impl == "pallas_vmap" else impl)
                 dt, out = _bench(fn, u, v, reps=reps)
                 ok = True
                 if validate:
@@ -107,6 +115,10 @@ def run(log2bits, batches, impls, reps=3, validate=True, out_path=None):
                     "ms": round(dt * 1e3, 3),
                     "products_per_s": round(batch / dt, 2),
                     "staging_bytes": _staging_bytes(impl, m, batch),
+                    "launches": launches,
+                    "xla_ops": xla_ops,
+                    "model_launches": model,
+                    "launch_match": launches == model,
                     "exact": ok,
                     "backend": jax.default_backend(),
                     "schema": _SCHEMA,
@@ -120,21 +132,11 @@ def run(log2bits, batches, impls, reps=3, validate=True, out_path=None):
     return rows
 
 
-def merge_json(path, rows):
-    """Deterministic append: update rows by (bits, batch, impl) key,
-    keep everything else, rewrite sorted with a stable layout."""
-    old = []
-    if os.path.exists(path):
-        with open(path) as f:
-            old = json.load(f)
-    by_key = {(r["bits"], r["batch"], r["impl"]): r for r in old}
-    for r in rows:
-        by_key[(r["bits"], r["batch"], r["impl"])] = r
-    merged = [by_key[k] for k in sorted(by_key)]
-    with open(path, "w") as f:
-        json.dump(merged, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return merged
+# Deterministic keyed merge, shared with every BENCH_*.json emitter
+# (one row per (bits, batch, impl), updated field-wise, rewritten
+# sorted; validated by tools/check_bench.py).  table1_div.py imports
+# this name too.
+merge_json = RPT.merge_json
 
 
 def main(argv=None):
@@ -167,6 +169,8 @@ def main(argv=None):
                reps=args.reps, validate=args.validate, out_path=out_path)
     if not all(r["exact"] for r in rows):
         raise SystemExit("exactness check FAILED")
+    if not all(r["launch_match"] for r in rows):
+        raise SystemExit("launch count vs cost model FAILED")
     if out_path:
         print(f"wrote {out_path} ({len(rows)} rows updated)")
     return rows

@@ -13,6 +13,11 @@ STRUCTURAL fusion metrics straight off the traced program
                     ~15 XLA glue ops for the unfused composition)
   xla_ops           primitive dispatches outside kernel bodies (the
                     glue the fusion removes from the hot loop)
+  model_launches    the cost model's prediction for the same cell
+                    (repro.obs.costmodel: 2i+1 fused, 2i+2 unfused
+                    pallas, 0 pure-XLA) -- `launch_match` records
+                    measured == model, so BENCH_div.json carries the
+                    measured-vs-model verdict per row
 
 Wall times are backend-honest: on CPU the fused kernels execute in
 Pallas interpret mode (validation, not speed -- the speedup claim is
@@ -40,7 +45,6 @@ Usage:
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import time
 
@@ -50,11 +54,13 @@ import jax.numpy as jnp
 
 from repro.core import bigint as bi
 from repro.core import shinv as S
+from repro.obs import costmodel as CM
+from repro.obs import report as RPT
 from repro.utils import jaxpr_stats as JS
 
 IMPLS = ("pallas_fused", "pallas_batched", "blocked")
 
-_SCHEMA = 1   # bump when row fields change
+_SCHEMA = 2   # bump when row fields change (2: model_launches/launch_match)
 
 
 def _bench(fn, *args, reps=3):
@@ -127,12 +133,17 @@ def run(log2bits, batches, impls, reps=3, validate=True, out_path=None,
                 u, v, us, vs = _make_batch(rng, m, batch)
             for impl in impls:
                 launches, lpi, xla_ops = structural_counts(m, batch, impl)
+                model = CM.divmod_launches(m, impl)
                 row = {
                     "bits": bits, "batch": batch, "impl": impl,
                     "iters": it,
                     "launches": launches,
                     "launches_per_iter": round(lpi, 2),
                     "xla_ops": xla_ops,
+                    # the paper cost model's launch prediction for this
+                    # impl (obs/costmodel.py) next to the measurement
+                    "model_launches": model,
+                    "launch_match": launches == model,
                     "backend": jax.default_backend(),
                     "schema": _SCHEMA,
                 }
@@ -184,30 +195,51 @@ def run(log2bits, batches, impls, reps=3, validate=True, out_path=None,
     return rows
 
 
-def merge_json(path, rows):
-    """Deterministic merge: rows are keyed by (bits, batch, impl) and
-    UPDATED field-wise, so a --counts-only refresh of the structural
-    columns never clobbers previously measured timings (and vice
-    versa); the file is rewritten sorted with a stable layout."""
-    old = []
-    if os.path.exists(path):
-        with open(path) as f:
-            old = json.load(f)
-    by_key = {(r["bits"], r["batch"], r["impl"]): dict(r) for r in old}
-    for r in rows:
-        by_key.setdefault((r["bits"], r["batch"], r["impl"]), {}).update(r)
-    merged = [by_key[k] for k in sorted(by_key)]
-    with open(path, "w") as f:
-        json.dump(merged, f, indent=2, sort_keys=True)
-        f.write("\n")
-    return merged
+# Deterministic keyed merge (one row per (bits, batch, impl), updated
+# field-wise, rewritten sorted).  The writer now lives with the shared
+# benchmark schema in repro.obs.report; `tools/check_bench.py`
+# validates the invariants it maintains.
+merge_json = RPT.merge_json
+
+
+def _obs_smoke(m, batch, us, vs):
+    """Observability gate: drive a BigintDivisionService end to end,
+    then assert the snapshot's measured per-bucket launch counts equal
+    the cost model's 2*iters + 1 prediction (obs/costmodel.py) and the
+    runtime counters saw exactly this traffic."""
+    from repro.serving.bigint_service import BigintDivisionService
+    svc = BigintDivisionService(m_limbs=m, impl="pallas_fused",
+                                batch_buckets=(batch,))
+    qs, rs = svc.divide(us, vs)
+    if not all((q, r) == divmod(x, y)
+               for x, y, q, r in zip(us, vs, qs, rs)):
+        raise SystemExit("obs: service exactness FAILED")
+    snap = svc.snapshot()
+    print(RPT.render_measured_vs_model(snap))
+    want = 2 * iters_for(m) + 1
+    for row in RPT.measured_vs_model(snap):
+        if not row["match"]:
+            raise SystemExit(
+                f"obs: measured {row['measured_launches']} != model "
+                f"{row['model_launches']} (bucket {row['bucket']})")
+        if row["measured_launches"] != want:
+            raise SystemExit(
+                f"obs: launches {row['measured_launches']} != 2i+1={want}")
+    rt = snap["runtime"]
+    if rt["requests"].get("divmod", 0) != 1:
+        raise SystemExit("obs: request counter FAILED")
+    if rt["pad_waste"] != 0.0:     # batch == bucket: no padding
+        raise SystemExit(f"obs: pad_waste {rt['pad_waste']} != 0")
+    print(f"obs: snapshot launches == cost model ({want}), "
+          f"counters consistent")
 
 
 def _smoke(out_path):
     """CI gate: tiny sizes, exactness + bit-equivalence + the <= 2
     launches/iteration fusion contract, for BOTH fused-kernel
     generations (the grid-scheduled path is forced via the dispatch
-    threshold override so it runs at smoke sizes)."""
+    threshold override so it runs at smoke sizes), then the
+    observability gate (`_obs_smoke`)."""
     from repro.kernels import ops as KO
     rng = np.random.default_rng(7)
     m, batch = 16, 4            # 256-bit operands
@@ -238,8 +270,11 @@ def _smoke(out_path):
                   f"{lpi:.1f} launches/iter (total {launches})")
         finally:
             KO.set_fused_grid_threshold(None)
+    _obs_smoke(m, batch, us, vs)
     rows = run([8, 9], [batch], ["pallas_fused", "blocked"],
                counts_only=True, out_path=None)
+    if not all(r["launch_match"] for r in rows):
+        raise SystemExit("smoke: launch_match FAILED")
     print("smoke OK")
     return rows
 

@@ -23,12 +23,22 @@ Measured per precision:
                before precomputing the context pays for itself
   modexp_x     end-to-end ladder wall-time ratio divmod / Barrett
 
+Each row also records the STRUCTURAL launch telemetry of the two
+reduction executables straight off their traced programs
+(`red_launches` / `div_launches`, repro.utils.jaxpr_stats) next to the
+cost model's predictions (`model_red_launches` /
+`model_div_launches`, repro.obs.costmodel) -- the launch-count side of
+the (5..7)/2 amortization claim.  Rows merge deterministically into
+BENCH_modexp.json keyed by (bits, batch, impl) through the shared
+writer (repro.obs.report.merge_json).
+
 Run:  PYTHONPATH=src python benchmarks/modexp.py [--bits 256,512,1024]
 """
 
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import numpy as np
@@ -39,6 +49,11 @@ from repro.core import bigint as bi
 from repro.core import modarith as MA
 from repro.core import shinv as S
 from repro.kernels import ops as K
+from repro.obs import costmodel as CM
+from repro.obs import report as RPT
+from repro.utils import jaxpr_stats as JS
+
+_SCHEMA = 1
 
 
 def _bench(fn, *args, reps=3):
@@ -52,7 +67,7 @@ def _bench(fn, *args, reps=3):
 
 
 def run(sizes=(256, 512, 1024), batch=16, exp_bits=32, impl="blocked",
-        validate=True):
+        validate=True, out_path=None):
     rng = np.random.default_rng(0)
     rows = []
     print(f"batch={batch} exp_bits={exp_bits} impl={impl}")
@@ -84,6 +99,15 @@ def run(sizes=(256, 512, 1024), batch=16, exp_bits=32, impl="blocked",
             lambda ui, wi: K.mul(ui, wi, 2 * m, impl=impl)))
         sel = jax.jit(lambda cand, keep, bits_: jnp.where(
             (bits_ != 0)[:, None], cand, keep))
+
+        # structural launch telemetry of the two reduction executables
+        # vs the cost model (the launch side of the Barrett claim: one
+        # fused launch -- or 2 truncated-mul launches -- against the
+        # cached shinv, a full 2*iters+1 divmod without it)
+        red_launches, _ = JS.trace_counts(bar_red, x)
+        div_launches, _ = JS.trace_counts(div_red, x, v2)
+        model_red = CM.barrett_launches(impl)
+        model_div = CM.divmod_launches(2 * m, impl)
 
         t_bar = _bench(bar_red, x) / batch
         t_div = _bench(div_red, x, v2) / batch
@@ -119,11 +143,26 @@ def run(sizes=(256, 512, 1024), batch=16, exp_bits=32, impl="blocked",
                 [xi % v_int for xi in x_int], "reduce mismatch"
 
         cross = t_ctx / max(t_div - t_bar, 1e-12)
-        rows.append(dict(bits=bits, red_s=1 / t_bar, div_s=1 / t_div,
-                         speedup=t_div / t_bar, crossover=cross,
-                         modexp_x=t_md / t_mb, t_ctx=t_ctx))
+        rows.append(dict(
+            bits=bits, batch=batch, impl=impl,
+            red_s=round(1 / t_bar, 2), div_s=round(1 / t_div, 2),
+            speedup=round(t_div / t_bar, 3),
+            crossover=round(cross, 1),
+            modexp_x=round(t_md / t_mb, 3), t_ctx=round(t_ctx, 4),
+            red_launches=red_launches,
+            model_red_launches=model_red,
+            div_launches=div_launches,
+            model_div_launches=model_div,
+            launch_match=(red_launches == model_red
+                          and div_launches == model_div),
+            backend=jax.default_backend(), schema=_SCHEMA))
         print(f"{bits:>6} {1 / t_bar:>10.1f} {1 / t_div:>10.1f} "
-              f"{t_div / t_bar:>8.2f} {cross:>10.1f} {t_md / t_mb:>9.2f}")
+              f"{t_div / t_bar:>8.2f} {cross:>10.1f} {t_md / t_mb:>9.2f}"
+              f"   red_launches={red_launches} (model {model_red})")
+        if out_path:            # survive partial/killed runs
+            RPT.merge_json(out_path, rows)
+    if not all(r["launch_match"] for r in rows):
+        raise SystemExit("launch count vs cost model FAILED")
     return rows
 
 
@@ -133,8 +172,14 @@ if __name__ == "__main__":
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--exp-bits", type=int, default=32)
     ap.add_argument("--impl", default="blocked")
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "..",
+        "BENCH_modexp.json"))
+    ap.add_argument("--no-out", action="store_true",
+                    help="don't write BENCH_modexp.json")
     ap.add_argument("--no-validate", action="store_true")
     args = ap.parse_args()
     run(sizes=tuple(int(s) for s in args.bits.split(",")),
         batch=args.batch, exp_bits=args.exp_bits, impl=args.impl,
-        validate=not args.no_validate)
+        validate=not args.no_validate,
+        out_path=None if args.no_out else os.path.normpath(args.out))

@@ -30,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import bigint as bi
 from repro.core import shinv as S
 from repro.kernels import ops as K
+from repro.obs import costmodel as CM
 
 BUDGET_BITS = 1 << 22          # Num Bits x Num Insts
 MAX_INSTS = 256
@@ -79,10 +80,12 @@ def run_counts(sizes, impl="pallas_fused", windowed=True):
         insts = min(max(BUDGET_BITS // bits, 4), MAX_INSTS)
         launches, lpi, xla_ops = DB.structural_counts(m, insts, impl,
                                                       windowed=windowed)
+        model = CM.divmod_launches(m, impl)
         row = {"bits": bits, "insts": insts, "impl": impl,
                "windowed": windowed, "iters": S.refine_iters(m),
                "launches": launches, "launches_per_iter": round(lpi, 2),
-               "xla_ops": xla_ops}
+               "xla_ops": xla_ops,
+               "model_launches": model, "launch_match": launches == model}
         if impl == "pallas_fused":
             row.update(DB.fused_geometry(m))
         rows.append(row)

@@ -39,3 +39,13 @@ for step in range(BATCHES):
         total += dt
     print(f"  batch {step}: {dt*1e3:7.1f} ms  exact={ok}")
 print(f"steady-state: {BATCH*(BATCHES-1)/total:.0f} divisions/s")
+
+# -- observability: runtime counters + measured-vs-model snapshot -----
+# (docs/observability.md; the static profile was captured when the
+# bucket compiled, the counters accumulated per request)
+from repro.obs import report  # noqa: E402
+
+st = svc.stats()
+print(f"\nrequests={st['requests']}  pad_waste={st['pad_waste']:.3f}  "
+      f"compiles={st['bucket_compiles']} reuses={st['bucket_reuses']}")
+print(report.render_measured_vs_model(svc.snapshot()))

@@ -91,17 +91,15 @@ from .ops import BLOCK_T
 _I = jnp.int32
 _U = jnp.uint32
 
-# Kernel-launch / glue-op accounting, consumed by serving.batching
-# .kernel_plan and benchmarks/div_breakdown.py.
-FUSED_STEP_LAUNCHES = 2        # PowDiff launch + update launch
-FUSED_CORRECT_LAUNCHES = 1
-FUSED_BARRETT_LAUNCHES = 1
-# Full-width XLA ops (several containing associative scans, i.e. their
-# own launch + HBM round trip) in step_reference: shift(v,-s), 2x prec,
-# 2x is_zero, neg_mod_pow(p,h), sub_pow, one_hot select, mask_below,
-# take_limb, neg_mod_pow(P,L), x select, shift(tmp), shift(w,m), add,
-# sub, sub_scalar, shift(-1), active select.
-UNFUSED_STEP_GLUE_OPS = 19
+# Kernel-launch / glue-op accounting.  The numbers live in
+# repro.obs.costmodel -- the single source of truth the measured-vs-
+# model comparator predicts against -- and are re-exported here so the
+# kernels' advertised contract can never drift from the model
+# (serving.batching.kernel_plan and benchmarks/div_breakdown.py consume
+# them from either name).
+from repro.obs.costmodel import (          # noqa: E402  (re-export)
+    FUSED_BARRETT_LAUNCHES, FUSED_CORRECT_LAUNCHES, FUSED_STEP_LAUNCHES,
+    UNFUSED_STEP_GLUE_OPS)
 
 
 def _rup(n: int, k: int) -> int:

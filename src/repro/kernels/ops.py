@@ -394,10 +394,12 @@ def fused_step(v, w, *, h, m, l, s, active, g: int, win: int,
     pallas_fused path routes the whole batch into 2 native launches.
     """
     from . import fused
+    from repro.obs import telemetry as OBS
     impl = impl or default_impl()
     if impl == "pallas_fused":
-        return fused.step_pallas(v, w, h=h, m=m, l=l, s=s, active=active,
-                                 g=g, win=win)
+        with OBS.scope("fused_step"):
+            return fused.step_pallas(v, w, h=h, m=m, l=l, s=s,
+                                     active=active, g=g, win=win)
     return fused.step_reference(v, w, h=h, m=m, l=l, s=s, active=active,
                                 g=g, win=win, impl=impl)
 
@@ -409,9 +411,11 @@ def fused_correct(u, v, si, *, h, impl: str | None = None):
     the documented total extension (q, r) = (0, u).  One batched Pallas
     launch under impl="pallas_fused"."""
     from . import fused
+    from repro.obs import telemetry as OBS
     impl = impl or default_impl()
     if impl == "pallas_fused":
-        return fused.correct_pallas(u, v, si, h=h)
+        with OBS.scope("fused_correct"):
+            return fused.correct_pallas(u, v, si, h=h)
     return fused.correct_reference(u, v, si, h=h, impl=impl)
 
 
@@ -421,7 +425,9 @@ def fused_barrett(x, mu, v, *, h: int, impl: str | None = None):
     width W (caller slices to the modulus width).  One batched Pallas
     launch under impl="pallas_fused"."""
     from . import fused
+    from repro.obs import telemetry as OBS
     impl = impl or default_impl()
     if impl == "pallas_fused":
-        return fused.barrett_pallas(x, mu, v, h=h)
+        with OBS.scope("fused_barrett"):
+            return fused.barrett_pallas(x, mu, v, h=h)
     return fused.barrett_reference(x, mu, v, h=h, impl=impl)

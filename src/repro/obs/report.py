@@ -1,0 +1,145 @@
+"""Measured-vs-model reporting and the shared benchmark row schema.
+
+Two jobs, both stdlib-only (importable without jax, so CI tooling can
+reuse them):
+
+  * `measured_vs_model` / `render_measured_vs_model`: turn a service
+    `snapshot()` (see serving/bigint_service.py, modexp_service.py)
+    into the repo's own "Table 1" -- one row per (op, bucket) with the
+    launches MEASURED off the traced program at bucket-compile time
+    next to the cost model's prediction (`obs/costmodel.py`), and a
+    match verdict.  The paper's discipline, applied to ourselves: the
+    claim "2 launches per Newton iteration" is only worth stating next
+    to a measurement.
+  * `merge_json` + `BENCH_KEY` / `BENCH_REQUIRED`: the deterministic
+    keyed-merge schema every BENCH_*.json emitter uses.  Rows are
+    keyed by (bits, batch, impl), UPDATED field-wise (a structural
+    --counts-only refresh never clobbers previously measured timings
+    and vice versa), and the file is rewritten sorted -- so diffs show
+    only changed numbers and `tools/check_bench.py` can validate the
+    invariants (key uniqueness, sorted/monotone size axis, required
+    fields).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from . import costmodel as CM
+
+# ---------------------------------------------------------------------------
+# BENCH_*.json schema (consumed by benchmarks/ and tools/check_bench.py)
+# ---------------------------------------------------------------------------
+
+# The merge key: exactly one row per (bits, batch, impl) cell.
+BENCH_KEY = ("bits", "batch", "impl")
+
+# Fields every row in the named file must carry (the telemetry schema
+# benchmarks emit through; older files satisfy these minimally).
+BENCH_REQUIRED = {
+    "BENCH_div.json": BENCH_KEY + ("iters", "launches",
+                                   "launches_per_iter", "xla_ops",
+                                   "model_launches", "launch_match"),
+    "BENCH_bigmul.json": BENCH_KEY + ("ms", "products_per_s",
+                                      "staging_bytes", "exact"),
+    "BENCH_modexp.json": BENCH_KEY + ("red_launches",
+                                      "model_red_launches"),
+}
+
+
+def merge_json(path: str, rows: list[dict], key=BENCH_KEY) -> list[dict]:
+    """Deterministic keyed merge into a JSON list file.
+
+    Existing rows are matched by `key` and UPDATED field-wise, so
+    partial refreshes (structural-only sweeps, timing-only reruns)
+    compose instead of clobbering; unknown keys are appended; the file
+    is rewritten sorted by key with stable layout."""
+    old = []
+    if os.path.exists(path):
+        with open(path) as f:
+            old = json.load(f)
+    by_key = {tuple(r[k] for k in key): dict(r) for r in old}
+    for r in rows:
+        by_key.setdefault(tuple(r[k] for k in key), {}).update(r)
+    merged = [by_key[k] for k in sorted(by_key)]
+    with open(path, "w") as f:
+        json.dump(merged, f, indent=2, sort_keys=True)
+        f.write("\n")
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# plain-text tables
+# ---------------------------------------------------------------------------
+
+def render_table(rows: list[dict], columns: list[str] | None = None,
+                 title: str | None = None) -> str:
+    """Right-aligned plain-text table from a list of row dicts."""
+    if not rows:
+        return (title + "\n" if title else "") + "(no rows)"
+    columns = columns or list(rows[0])
+
+    def fmt(v):
+        if isinstance(v, float):
+            return f"{v:.2f}"
+        return "-" if v is None else str(v)
+
+    cells = [[fmt(r.get(c)) for c in columns] for r in rows]
+    widths = [max(len(c), *(len(row[i]) for row in cells))
+              for i, c in enumerate(columns)]
+    def line(vals):
+        return "  ".join(v.rjust(w) for v, w in zip(vals, widths))
+    out = ([title] if title else []) + [line(columns)]
+    out.append("  ".join("-" * w for w in widths))
+    out += [line(row) for row in cells]
+    return "\n".join(out)
+
+
+# ---------------------------------------------------------------------------
+# measured vs model
+# ---------------------------------------------------------------------------
+
+def measured_vs_model(snapshot: dict) -> list[dict]:
+    """Comparison rows from a service snapshot.
+
+    For every (bucket, op) static profile the snapshot carries, emit
+    the measured structural counts (pallas launches, XLA glue eqns --
+    captured by `utils/jaxpr_stats.py:trace_profile` when the bucket
+    compiled) next to the cost model's launch prediction for that op
+    at the service's precision and impl.  `model` is None where the
+    static trace is not the meaningful unit (modexp: launches sit
+    inside scan bodies); those rows never fail the match."""
+    m = snapshot["m_limbs"]
+    impl = snapshot["impl"]
+    rows = []
+    for bucket in sorted(snapshot.get("buckets", {})):
+        info = snapshot["buckets"][bucket]
+        for op in sorted(info.get("static", {})):
+            st = info["static"][op]
+            model = CM.model_launches(op, m, impl)
+            measured = st["pallas_launches"]
+            rows.append({
+                "bucket": bucket, "op": op, "impl": impl,
+                "m_limbs": m,
+                # the Refine trip count drives the divmod 2i+1 contract;
+                # other ops run against a cached inverse (no refinement)
+                "iters": CM.refine_iters(m) if op == "divmod" else None,
+                "measured_launches": measured,
+                "model_launches": model,
+                "xla_eqns": st["xla_eqns"],
+                "total_eqns": st["total_eqns"],
+                "match": (model is None) or (measured == model),
+            })
+    return rows
+
+
+def render_measured_vs_model(snapshot: dict) -> str:
+    """The measured-vs-model table for one service snapshot."""
+    rows = measured_vs_model(snapshot)
+    name = snapshot.get("service", "service")
+    title = (f"{name} (m_limbs={snapshot['m_limbs']}, "
+             f"impl={snapshot['impl']}) -- measured vs cost model")
+    return render_table(rows, columns=[
+        "bucket", "op", "iters", "measured_launches", "model_launches",
+        "xla_eqns", "match"], title=title)

@@ -54,14 +54,17 @@ def kernel_plan(bucket: int, w_limbs: int,
     Single source of truth is the kernel itself: block_b comes from
     `bigmul.pick_block_b`, the pair count from the same ceil-division
     blocking the kernel schedule uses, the fused-step geometry
-    (launches vs XLA glue ops per Refine iteration) from the
-    kernels/fused.py accounting constants, and the unrolled-vs-grid
-    generation plus its phase-tape geometry from `ops.fused_path` /
-    `fused.grid_plan`, so the plan is exactly what a launch at this
-    (bucket, precision) will execute.
+    (launches vs XLA glue ops per Refine iteration) from the cost
+    model (`repro.obs.costmodel`, which kernels/fused.py re-exports,
+    so the plan can never drift from the measured-vs-model
+    comparator), and the unrolled-vs-grid generation plus its
+    phase-tape geometry from `ops.fused_path` / `fused.grid_plan`, so
+    the plan is exactly what a launch at this (bucket, precision) will
+    execute.
     """
     from repro.kernels import ops as K
     from repro.kernels import bigmul, fused
+    from repro.obs import costmodel as CM
     impl = impl or K.default_impl()
     nb = max(-(-2 * w_limbs // K.BLOCK_T), 1)    # sub-digit blocks/operand
     if impl == "pallas_fused":
@@ -71,21 +74,22 @@ def kernel_plan(bucket: int, w_limbs: int,
                                  else (0, 0, 0))
         return KernelPlan(impl, bb, -(-bucket // bb), nb * nb,
                           fused=True,
-                          step_launches=fused.FUSED_STEP_LAUNCHES,
-                          step_glue_ops=0,
+                          step_launches=CM.step_launches(impl),
+                          step_glue_ops=CM.step_glue_ops(impl),
                           grid_scheduled=grid, grid_steps=steps,
                           super_tile=s_tile, revisit_passes=passes)
     if impl == "pallas_batched":
         bb = bigmul.pick_block_b(bucket)
         return KernelPlan(impl, bb, -(-bucket // bb), nb * nb,
-                          fused=False, step_launches=2,
-                          step_glue_ops=fused.UNFUSED_STEP_GLUE_OPS)
+                          fused=False,
+                          step_launches=CM.step_launches(impl),
+                          step_glue_ops=CM.step_glue_ops(impl))
     # "pallas" still launches its 2 per-lane mul kernels each
     # iteration; "scan"/"blocked" run everything as XLA ops.
     return KernelPlan(impl, 1, bucket, nb * nb,
                       fused=False,
-                      step_launches=2 if impl == "pallas" else 0,
-                      step_glue_ops=fused.UNFUSED_STEP_GLUE_OPS)
+                      step_launches=CM.step_launches(impl),
+                      step_glue_ops=CM.step_glue_ops(impl))
 
 
 class Batcher:
@@ -139,15 +143,91 @@ def sharded_jit(fn, mesh, batched_argnums, n_args: int, n_out: int = 1):
     return jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
 
 
+class ServiceMetrics:
+    """The service-standard runtime metric families, on one Registry.
+
+    Shared by both serving frontends so their `stats()` dictionaries
+    and exported series are uniform (docs/observability.md documents
+    the names/labels).  All recording happens host-side around the
+    compiled per-bucket calls -- nothing here touches traced values.
+    """
+
+    def __init__(self):
+        from repro.obs import telemetry as T
+        self.registry = T.Registry()
+        self._requests = self.registry.counter(
+            "requests_total", "service endpoint calls", ("op",))
+        self._items = self.registry.counter(
+            "items_total", "true (unpadded) request rows", ("op",))
+        self._rows_true = self.registry.counter(
+            "batch_rows_true_total", "true rows per compiled bucket",
+            ("bucket",))
+        self._rows_padded = self.registry.counter(
+            "batch_rows_padded_total", "bucket-padded rows submitted",
+            ("bucket",))
+        self._latency = self.registry.histogram(
+            "bucket_seconds", "per-bucket execution wall time",
+            ("op", "bucket"))
+
+    def record_request(self, op: str, n_items: int) -> None:
+        self._requests.labels(op=op).inc()
+        self._items.labels(op=op).inc(n_items)
+
+    def chunk_timer(self, op: str, bucket: int):
+        """Context manager timing one padded-bucket execution."""
+        return self._latency.labels(op=op, bucket=bucket).time()
+
+    def record_rows(self, bucket: int, true_rows: int) -> None:
+        self._rows_true.labels(bucket=bucket).inc(true_rows)
+        self._rows_padded.labels(bucket=bucket).inc(bucket)
+
+    def pad_waste(self) -> float:
+        """Fraction of submitted rows that were padding: (padded -
+        true) / padded over the service lifetime (0.0 when idle)."""
+        padded = sum(s.value for s in self._rows_padded.series())
+        true = sum(s.value for s in self._rows_true.series())
+        return (padded - true) / padded if padded else 0.0
+
+    def stats(self) -> dict:
+        """Plain-data runtime counters (structural fields exact and
+        deterministic; timing fields are wall-clock sums)."""
+        return {
+            "requests": {s.labels["op"]: int(s.value)
+                         for s in self._requests.series()},
+            "items": {s.labels["op"]: int(s.value)
+                      for s in self._items.series()},
+            "rows_true": int(sum(s.value
+                                 for s in self._rows_true.series())),
+            "rows_padded": int(sum(s.value
+                                   for s in self._rows_padded.series())),
+            "pad_waste": self.pad_waste(),
+            "bucket_seconds": {
+                f"{s.labels['op']}/b{s.labels['bucket']}":
+                    {"count": s.count, "sum": s.value}
+                for s in self._latency.series()},
+        }
+
+
 class CompiledBuckets:
-    """Lazy cache of compiled executables, keyed by (op, bucket)."""
+    """Lazy cache of compiled executables, keyed by (op, bucket).
+
+    Tracks hits/misses so services can expose bucket-compile counts;
+    `build` runs only on a miss, which is where the services capture
+    each bucket's static structural profile (trace_profile + the
+    KernelPlan) -- see serving/bigint_service.py and
+    serving/modexp_service.py `snapshot()`."""
 
     def __init__(self):
         self._fns: dict[object, object] = {}
+        self.hits = 0
+        self.misses = 0
 
     def get(self, key, build):
         if key not in self._fns:
+            self.misses += 1
             self._fns[key] = build()
+        else:
+            self.hits += 1
         return self._fns[key]
 
     def __len__(self) -> int:

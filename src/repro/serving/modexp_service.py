@@ -9,6 +9,16 @@ inverse, so a reduction costs two truncated multiplications instead of
 a full division.  Bucketing, padding, and mesh sharding are shared with
 `BigintDivisionService` via `serving.batching`; the context is
 replicated across the mesh while the request batch is sharded.
+
+Observability (docs/observability.md): every (op, bucket) compile
+captures a STATIC structural profile off the traced program (Pallas
+launches incl. the scan-trip-weighted runtime count, XLA glue eqns,
+total eqns -- `utils/jaxpr_stats.trace_profile`) plus the
+`KernelPlan`; runtime counters cover requests, true-vs-padded rows,
+per-bucket latency, and the Barrett context cache
+(hits/misses/evictions).  `stats()` returns the runtime counters,
+`snapshot()` the merged static + runtime profile that
+`obs/report.py` renders as a measured-vs-model table.
 """
 
 from __future__ import annotations
@@ -22,6 +32,8 @@ import jax.numpy as jnp
 
 from repro.core import bigint as bi
 from repro.core import modarith as MA
+from repro.obs import telemetry as OBS
+from repro.utils import jaxpr_stats as JS
 from . import batching as BT
 
 
@@ -37,27 +49,39 @@ class ModArithService:
     windowed:   size-bucketed Newton refinement in the precompute
     window_bits: modexp ladder window (must divide 16)
     max_cached_moduli: LRU bound on device-resident contexts
+    capture_profiles: trace a static structural profile at every
+                (op, bucket) compile (cheap at service precisions;
+                disable for very large m where a trace is minutes)
     """
 
     def __init__(self, m_limbs: int, mesh=None, impl: str | None = None,
                  windowed: bool = True, window_bits: int = 4,
                  e_limbs: int | None = None,
                  batch_buckets=(64, 256, 1024),
-                 max_cached_moduli: int = 64):
+                 max_cached_moduli: int = 64,
+                 capture_profiles: bool = True):
         self.m = m_limbs
         self.e_limbs = e_limbs if e_limbs is not None else m_limbs
         self.mesh = mesh
         self.impl = impl
         self.windowed = windowed
         self.window_bits = window_bits
+        self.capture_profiles = capture_profiles
         self.batcher = BT.Batcher(batch_buckets)
         self._fns = BT.CompiledBuckets()
         # per-bucket kernel geometry, recorded when the bucket compiles
         self.kernel_plans: dict[int, BT.KernelPlan] = {}
+        # per-bucket static structural profiles, keyed [bucket][op],
+        # captured at the same moment (a CompiledBuckets miss)
+        self.static_profiles: dict[int, dict] = {}
         self._ctxs: OrderedDict[int, MA.BarrettContext] = OrderedDict()
         self.max_cached = max_cached_moduli
         self.ctx_hits = 0
         self.ctx_misses = 0
+        self.ctx_evictions = 0
+        self.telemetry = BT.ServiceMetrics()
+        self._ctx_metric = self.telemetry.registry.counter(
+            "ctx_cache_total", "Barrett context cache events", ("event",))
         self._precompute = jax.jit(partial(
             MA.barrett_precompute, impl=impl, windowed=windowed))
 
@@ -72,15 +96,28 @@ class ModArithService:
         if v in self._ctxs:
             self._ctxs.move_to_end(v)
             self.ctx_hits += 1
+            self._ctx_metric.labels(event="hit").inc()
             return self._ctxs[v]
         self.ctx_misses += 1
-        ctx = self._precompute(jnp.asarray(bi.from_int(v, self.m)))
+        self._ctx_metric.labels(event="miss").inc()
+        with OBS.annotate("modexp_service/precompute"):
+            ctx = self._precompute(jnp.asarray(bi.from_int(v, self.m)))
         self._ctxs[v] = ctx
         while len(self._ctxs) > self.max_cached:
             self._ctxs.popitem(last=False)
+            self.ctx_evictions += 1
+            self._ctx_metric.labels(event="eviction").inc()
         return ctx
 
     # -- compiled per-bucket executables ----------------------------------
+
+    def _zero_ctx(self) -> MA.BarrettContext:
+        """Shape-only BarrettContext for structural tracing (no
+        precompute -- trace_profile never executes)."""
+        return MA.BarrettContext(
+            v=jnp.zeros((self.m,), bi.DTYPE),
+            mu=jnp.zeros((MA.barrett_width(self.m),), jnp.uint32),
+            k=jnp.zeros((), jnp.int32))
 
     def _fn(self, op: str, bucket: int):
         def build():
@@ -92,33 +129,49 @@ class ModArithService:
             if op == "reduce":
                 f = partial(MA.reduce_shared, impl=impl)
                 batched = (1,)
-                n_args = 2
+                widths = (2 * self.m,)
             elif op == "modmul":
                 f = partial(MA.modmul_shared, impl=impl)
                 batched = (1, 2)
-                n_args = 3
+                widths = (self.m, self.m)
             elif op == "modexp":
                 f = partial(MA.modexp_shared, impl=impl,
                             window_bits=self.window_bits)
                 batched = (1, 2)
-                n_args = 3
+                widths = (self.m, self.e_limbs)
             else:
                 raise ValueError(op)
-            return BT.sharded_jit(f, self.mesh, batched, n_args, n_out=1)
+            if self.capture_profiles:
+                zs = [jnp.zeros((bucket, w), jnp.uint32) for w in widths]
+                self.static_profiles.setdefault(bucket, {})[op] = \
+                    JS.trace_profile(f, self._zero_ctx(), *zs)
+            return BT.sharded_jit(f, self.mesh, batched,
+                                  n_args=1 + len(widths), n_out=1)
         return self._fns.get((op, bucket), build)
+
+    def profile_bucket(self, op: str, bucket: int) -> dict:
+        """Force-compile one (op, bucket) executable (trace only, no
+        execution) and return the bucket's static profiles."""
+        self._fn(op, bucket)
+        return self.static_profiles.get(bucket, {})
 
     def _run(self, op: str, v: int, columns, widths) -> list[int]:
         """Pack int columns to limb batches, run per bucket, unpack."""
         n = len(columns[0])
         assert n > 0 and all(len(c) == n for c in columns)
+        self.telemetry.record_request(op, n)
         ctx = self.context(v)
         out: list[int] = []
         for lo, hi, bucket in self.batcher.plan(n):
             arrs = [jnp.asarray(bi.batch_from_ints(
                         BT.pad_ints(col[lo:hi], bucket, 0), w))
                     for col, w in zip(columns, widths)]
-            res = self._fn(op, bucket)(ctx, *arrs)
-            out += bi.batch_to_ints(np.asarray(res)[:hi - lo])
+            fn = self._fn(op, bucket)
+            self.telemetry.record_rows(bucket, hi - lo)
+            with OBS.annotate(f"modexp_service/{op}/b{bucket}"), \
+                    self.telemetry.chunk_timer(op, bucket):
+                res = np.asarray(fn(ctx, *arrs))
+            out += bi.batch_to_ints(res[:hi - lo])
         return out
 
     # -- public entry points ----------------------------------------------
@@ -138,3 +191,44 @@ class ModArithService:
     def modexp(self, a: list[int], e: list[int], v: int) -> list[int]:
         """[pow(a_i, e_i, v)] -- fixed-window ladder, one cached shinv."""
         return self._run("modexp", v, [a, e], [self.m, self.e_limbs])
+
+    # -- introspection ----------------------------------------------------
+
+    def stats(self) -> dict:
+        """Runtime counters only (see `snapshot` for the merged view)."""
+        out = self.telemetry.stats()
+        total = self.ctx_hits + self.ctx_misses
+        out["ctx_cache"] = {
+            "hits": self.ctx_hits,
+            "misses": self.ctx_misses,
+            "evictions": self.ctx_evictions,
+            "size": len(self._ctxs),
+            "hit_rate": self.ctx_hits / total if total else 0.0,
+        }
+        out["bucket_compiles"] = self._fns.misses
+        out["bucket_reuses"] = self._fns.hits
+        return out
+
+    def snapshot(self) -> dict:
+        """Merged static + runtime profile: per-bucket KernelPlan
+        geometry and per-op structural trace counts alongside the
+        lifetime runtime counters.  Render with
+        `obs/report.py:render_measured_vs_model`."""
+        from repro.kernels import ops as K
+        buckets = {}
+        for b in sorted(set(self.kernel_plans) | set(self.static_profiles)):
+            entry = {}
+            if b in self.kernel_plans:
+                entry["plan"] = self.kernel_plans[b]._asdict()
+            if b in self.static_profiles:
+                entry["static"] = self.static_profiles[b]
+            buckets[b] = entry
+        return {
+            "service": "modarith",
+            "m_limbs": self.m,
+            "e_limbs": self.e_limbs,
+            "window_bits": self.window_bits,
+            "impl": self.impl or K.default_impl(),
+            "buckets": buckets,
+            "runtime": self.stats(),
+        }

@@ -1,0 +1,112 @@
+"""Launch/op accounting semantics of repro.utils.jaxpr_stats.
+
+These pin the counting rules documented in the module docstring:
+nested pjit never double-counts a launch, custom_vmap'd kernels count
+one launch batched or unbatched, empty jaxprs count zero, scan bodies
+count once statically but trip-weighted in `runtime_pallas_launches`,
+and both cond branches are walked.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as K
+from repro.utils import jaxpr_stats as JS
+
+W = 8
+
+
+def _z(shape=(W,)):
+    return jnp.zeros(shape, jnp.uint32)
+
+
+def _mul(a, b):
+    return K.mul(a, b, 2 * W, impl="pallas")
+
+
+def test_single_kernel_is_one_launch():
+    launches, xla = JS.trace_counts(_mul, _z(), _z())
+    assert launches == 1
+    assert xla >= 1
+
+
+def test_nested_pjit_counts_one_launch():
+    # each jit wrapper adds exactly one pjit eqn, never a launch
+    plain_l, plain_x = JS.trace_counts(_mul, _z(), _z())
+    nest_l, nest_x = JS.trace_counts(jax.jit(jax.jit(_mul)), _z(), _z())
+    assert nest_l == plain_l == 1
+    assert nest_x == plain_x + 2
+
+
+def test_custom_vmap_counts_one_launch_batched_or_not():
+    # unbatched: the custom_vmap call jaxpr wraps the kernel
+    launches, _ = JS.trace_counts(
+        lambda a, b: K.mul(a, b, 2 * W, impl="pallas_batched"),
+        _z(), _z())
+    assert launches == 1
+    # batched: the vmap rule hands the whole batch to ONE kernel
+    launches, _ = JS.trace_counts(
+        jax.vmap(lambda a, b: K.mul(a, b, 2 * W, impl="pallas_batched")),
+        _z((4, W)), _z((4, W)))
+    assert launches == 1
+
+
+def test_empty_jaxpr_counts_zero():
+    jx = jax.make_jaxpr(lambda x: x)(_z())
+    assert JS.pallas_launches(jx) == 0
+    assert JS.runtime_pallas_launches(jx) == 0
+    assert JS.xla_eqns(jx) == 0 and JS.total_eqns(jx) == 0
+
+
+def test_scan_body_static_once_runtime_trip_weighted():
+    def body(c, _):
+        return K.mul(c, c, W, impl="pallas"), None
+
+    def ladder(x):
+        return jax.lax.scan(body, x, None, length=5)[0]
+
+    prof = JS.trace_profile(ladder, _z())
+    assert prof["pallas_launches"] == 1          # static: counted once
+    assert prof["runtime_pallas_launches"] == 5  # trip-weighted
+
+    def nested(x):
+        return jax.lax.scan(lambda c, _: (ladder(c), None),
+                            x, None, length=3)[0]
+
+    prof = JS.trace_profile(nested, _z())
+    assert prof["pallas_launches"] == 1
+    assert prof["runtime_pallas_launches"] == 15     # nested multiply
+
+
+def test_cond_counts_every_branch():
+    def f(x):
+        return jax.lax.cond(
+            x[0] > 0,
+            lambda v: K.mul(v, v, W, impl="pallas"),
+            lambda v: K.mul(v, v, W, impl="pallas"),
+            x)
+
+    launches, _ = JS.trace_counts(f, _z())
+    assert launches == 2         # what is compiled, not one execution
+
+
+def test_kernel_bodies_never_count_as_dispatches():
+    jx = jax.make_jaxpr(lambda a, b: _mul(a, b))(_z(), _z())
+    # the kernel body's eqns show up in total_eqns but not in the
+    # XLA-level dispatch proxy
+    assert JS.total_eqns(jx) > JS.xla_eqns(jx)
+    # into_kernels=False yields the pallas_call itself exactly once
+    names = [e.primitive.name
+             for e in JS.iter_eqns(jx, into_kernels=False)]
+    assert names.count("pallas_call") == JS.pallas_launches(jx) == 1
+
+
+def test_trace_profile_matches_component_counts():
+    prof = JS.trace_profile(_mul, _z(), _z())
+    jx = jax.make_jaxpr(_mul)(_z(), _z())
+    assert prof == {
+        "pallas_launches": JS.pallas_launches(jx),
+        "runtime_pallas_launches": JS.runtime_pallas_launches(jx),
+        "xla_eqns": JS.xla_eqns(jx),
+        "total_eqns": JS.total_eqns(jx),
+    }

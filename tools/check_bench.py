@@ -1,0 +1,88 @@
+"""Benchmark-results schema checker (CI `docs` job).
+
+Validates every BENCH_*.json the repo tracks against the shared row
+schema in `repro.obs.report` (the same module the benchmark emitters
+write through):
+
+  * rows carry the required fields for their file
+    (`report.BENCH_REQUIRED`) -- the telemetry schema benchmarks emit
+    through, including the measured-vs-model launch columns;
+  * the merge key (bits, batch, impl) is UNIQUE -- the keyed merge
+    guarantees one row per cell, so a duplicate means a writer
+    bypassed `report.merge_json`;
+  * the file is sorted by the merge key with a monotone size axis
+    (what the deterministic rewrite produces -- unsorted rows mean a
+    hand edit that will churn the next merge's diff);
+  * every recorded `launch_match` verdict is true -- a false verdict
+    is a measured-vs-cost-model regression frozen into the repo.
+
+Pure stdlib + `repro.obs.report` / `repro.obs.costmodel`, which are
+importable without jax, so this runs in the CI docs job without a
+backend.
+
+Exit code 1 with a per-failure listing when anything is broken.
+
+Usage:  python tools/check_bench.py [files...]   (default: BENCH_*.json)
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+
+from repro.obs.report import BENCH_KEY, BENCH_REQUIRED   # noqa: E402
+
+
+def check_file(path: pathlib.Path) -> list[str]:
+    errs: list[str] = []
+    try:
+        rows = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path.name}: unreadable ({e})"]
+    if not isinstance(rows, list):
+        return [f"{path.name}: expected a JSON list of rows"]
+    required = BENCH_REQUIRED.get(path.name, BENCH_KEY)
+
+    keys = []
+    for i, r in enumerate(rows):
+        missing = [f for f in required if f not in r]
+        if missing:
+            errs.append(f"{path.name}[{i}]: missing fields {missing}")
+            continue
+        keys.append(tuple(r[k] for k in BENCH_KEY))
+        if r.get("launch_match") is False:
+            errs.append(
+                f"{path.name}[{i}] {keys[-1]}: launch_match is false "
+                f"(measured {r.get('launches')} != model "
+                f"{r.get('model_launches')})")
+    dups = {k for k in keys if keys.count(k) > 1}
+    if dups:
+        errs.append(f"{path.name}: duplicate merge keys {sorted(dups)}")
+    if keys != sorted(keys):
+        errs.append(f"{path.name}: rows not sorted by {BENCH_KEY} "
+                    "(rewrite via repro.obs.report.merge_json)")
+    return errs
+
+
+def main(argv: list[str]) -> int:
+    paths = ([pathlib.Path(a) for a in argv]
+             or sorted(ROOT.glob("BENCH_*.json")))
+    errs: list[str] = []
+    for p in paths:
+        errs += check_file(p)
+        print(f"checked {p.name}")
+    if errs:
+        print(f"\n{len(errs)} problem(s):")
+        for e in errs:
+            print("  " + e)
+        return 1
+    print("bench schema OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
