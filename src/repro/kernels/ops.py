@@ -98,6 +98,42 @@ def set_default_impl(name: str) -> None:
 
 
 # ---------------------------------------------------------------------------
+# graceful-degradation ladder (consumed by the serving tier)
+#
+# Every impl is bit-exact against every other (CI-enforced), so when a
+# Pallas compile or launch fails at some (impl, bucket, precision) the
+# serving frontend can fall DOWN this ladder and still return exactly
+# the bytes the healthy path would: each step trades launches/perf for
+# a strictly simpler lowering (fused kernels -> plain batched kernel
+# -> pure-XLA blocked matmul, which needs no Mosaic at all).  "scan"
+# is deliberately not a fallback target: it is the test oracle, orders
+# of magnitude too slow to serve traffic.
+# ---------------------------------------------------------------------------
+
+_FALLBACK = {"pallas_fused": "pallas_batched",
+             "pallas_batched": "blocked",
+             "pallas": "blocked"}
+
+
+def fallback_impl(name: str) -> str | None:
+    """The next impl down the degradation ladder, or None when `name`
+    is terminal ("blocked"/"scan" run as plain XLA ops)."""
+    if name not in IMPLS:
+        raise ValueError(f"unknown impl {name!r}; expected one of {IMPLS}")
+    return _FALLBACK.get(name)
+
+
+def fallback_chain(name: str) -> list[str]:
+    """`name` followed by every impl below it on the ladder."""
+    chain = [name]
+    nxt = fallback_impl(name)
+    while nxt is not None:
+        chain.append(nxt)
+        nxt = _FALLBACK.get(nxt)
+    return chain
+
+
+# ---------------------------------------------------------------------------
 # fused-kernel generation dispatch (unrolled vs grid-scheduled)
 #
 # The fused division-step kernels come in two generations

@@ -143,3 +143,29 @@ def render_measured_vs_model(snapshot: dict) -> str:
     return render_table(rows, columns=[
         "bucket", "op", "iters", "measured_launches", "model_launches",
         "xla_eqns", "match"], title=title)
+
+
+# ---------------------------------------------------------------------------
+# serving health surface
+# ---------------------------------------------------------------------------
+
+def render_health(health: dict) -> str:
+    """Human-readable one-screen view of a serving frontend's
+    `healthz()` dict (docs/serving.md documents the schema): status
+    line, queue/failure gauges, and the quarantine set with breaker
+    states.  Stdlib-only, like the rest of this module."""
+    lines = [f"status: {health.get('status', '?')}  "
+             f"(accepting={health.get('accepting')}, "
+             f"ready={health.get('ready')})"]
+    for key in ("queue_depth", "queued_items", "inflight",
+                "deadline_exceeded", "retries", "dropped"):
+        if key in health:
+            lines.append(f"  {key:18s} {health[key]}")
+    quarantine = health.get("quarantine", [])
+    lines.append(f"  quarantine         "
+                 f"{', '.join(quarantine) if quarantine else '(empty)'}")
+    breakers = health.get("breakers", {})
+    open_ish = {k: v for k, v in breakers.items() if v != "closed"}
+    for key, state in sorted(open_ish.items()):
+        lines.append(f"    breaker {key:24s} {state}")
+    return "\n".join(lines)

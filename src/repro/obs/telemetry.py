@@ -252,6 +252,26 @@ class Registry:
         return lines
 
 
+def merged_collect(*registries) -> list[dict]:
+    """One deterministic dump across several registries (e.g. a
+    serving frontend's queue/failure families next to the wrapped
+    service's request families).  Families are concatenated in
+    name-sorted order; name collisions are kept as separate entries
+    (distinct owners are distinct series sources by design -- the
+    registry model has no global singletons to merge into)."""
+    fams = [fam for reg in registries for fam in reg.collect()]
+    return sorted(fams, key=lambda f: f["name"])
+
+
+def merged_lines(*registries) -> list[str]:
+    """Line-protocol export across several registries (see
+    `merged_collect`); the serving tier's one-stop metric export."""
+    out = []
+    for reg in registries:
+        out.extend(reg.to_lines())
+    return out
+
+
 @contextlib.contextmanager
 def timer():
     """Standalone monotonic timer: `with timer() as t: ...; t.seconds`."""

@@ -23,10 +23,18 @@ time at the paper's 2^15..2^18-bit precisions.
 
 from __future__ import annotations
 
+import threading
 from typing import NamedTuple
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def resolve_impl(impl: str | None) -> str:
+    """Concrete impl name for an optional override (None = backend
+    default), shared by the services and the frontend ladder."""
+    from repro.kernels import ops as K
+    return impl or K.default_impl()
 
 
 class KernelPlan(NamedTuple):
@@ -44,6 +52,9 @@ class KernelPlan(NamedTuple):
                                # kernel (pair steps + revisit passes)
     super_tile: int = 0        # per-step product tile, in sub-digits
     revisit_passes: int = 0    # stage/glue revisit passes per launch
+    degraded_from: str = ""    # non-empty when this bucket compiled a
+                               # FALLBACK impl (serving degradation
+                               # ladder) instead of the requested one
 
 
 def kernel_plan(bucket: int, w_limbs: int,
@@ -108,7 +119,10 @@ class Batcher:
         return next((b for b in self.buckets if b >= n), self.buckets[-1])
 
     def plan(self, n: int) -> list[tuple[int, int, int]]:
-        """[(lo, hi, bucket)] chunks covering range(n)."""
+        """[(lo, hi, bucket)] chunks covering range(n); an empty
+        request plans no chunks."""
+        if n <= 0:
+            return []
         big = self.buckets[-1]
         out, i = [], 0
         while n - i > big:
@@ -209,26 +223,40 @@ class ServiceMetrics:
 
 
 class CompiledBuckets:
-    """Lazy cache of compiled executables, keyed by (op, bucket).
+    """Lazy cache of compiled executables, keyed by (op, bucket[,
+    impl]).
 
     Tracks hits/misses so services can expose bucket-compile counts;
     `build` runs only on a miss, which is where the services capture
     each bucket's static structural profile (trace_profile + the
     KernelPlan) -- see serving/bigint_service.py and
-    serving/modexp_service.py `snapshot()`."""
+    serving/modexp_service.py `snapshot()`.
+
+    Thread-safe: concurrent requests against an uncompiled bucket must
+    not double-compile it (two racing `build()`s waste minutes at
+    large precisions) or corrupt the dict, so get() holds one RLock
+    across the check-and-build.  This serializes first-touch compiles
+    of DIFFERENT buckets too -- acceptable, since steady-state traffic
+    is all hits and a failed build leaves nothing cached (the next
+    request retries it)."""
 
     def __init__(self):
         self._fns: dict[object, object] = {}
+        self._lock = threading.RLock()
         self.hits = 0
         self.misses = 0
 
     def get(self, key, build):
-        if key not in self._fns:
+        with self._lock:
+            fn = self._fns.get(key)
+            if fn is not None:
+                self.hits += 1
+                return fn
             self.misses += 1
-            self._fns[key] = build()
-        else:
-            self.hits += 1
-        return self._fns[key]
+            fn = build()
+            self._fns[key] = fn
+            return fn
 
     def __len__(self) -> int:
-        return len(self._fns)
+        with self._lock:
+            return len(self._fns)

@@ -29,12 +29,13 @@ from repro.core import shinv as S
 from repro.obs import telemetry as OBS
 from repro.utils import jaxpr_stats as JS
 from . import batching as BT
+from . import errors as E
 
 
 class BigintDivisionService:
     def __init__(self, m_limbs: int, mesh=None, impl: str | None = None,
                  batch_buckets=(64, 256, 1024),
-                 capture_profiles: bool = True):
+                 capture_profiles: bool = True, faults=None):
         self.m = m_limbs
         self.mesh = mesh
         self.impl = impl
@@ -47,16 +48,45 @@ class BigintDivisionService:
         # moment (a CompiledBuckets miss)
         self.static_profiles: dict[int, dict] = {}
         self.telemetry = BT.ServiceMetrics()
+        self.faults = faults            # serving/faults.FaultInjector
 
     @property
     def buckets(self):
         return list(self.batcher.buckets)
 
-    def _fn(self, bucket: int):
+    def set_fault_injector(self, faults) -> None:
+        """Install (or clear, with None) a fault injector; the
+        injection sites below are exact no-ops without one."""
+        self.faults = faults
+
+    def _fire(self, site: str, **labels) -> None:
+        if self.faults is not None:
+            self.faults.fire(site, **labels)
+
+    def validate(self, op: str, columns, v=None) -> int:
+        """Full request validation (types, ranges, column lengths);
+        returns the request length.  Raises serving.errors
+        InvalidRequest subtypes carrying the offending index."""
+        if op != "divmod":
+            raise E.InvalidRequest(f"unknown op {op!r} for "
+                                   "BigintDivisionService")
+        n = E.check_lengths(columns, names=("us", "vs"))
+        lim = bi.BASE ** self.m
+        E.check_operands("u", columns[0], lim, f"B^{self.m}")
+        E.check_operands("v", columns[1], lim, f"B^{self.m}")
+        return n
+
+    def _fn(self, bucket: int, impl: str | None = None):
+        eff = BT.resolve_impl(impl or self.impl)
+
         def build():
+            self._fire("compile", op="divmod", bucket=bucket, impl=eff)
             # plan against the widest internal product: divmod pads to
             # m + PAD limbs and forms the double-width u * shinv there
-            plan = BT.kernel_plan(bucket, self.m + S.PAD, self.impl)
+            plan = BT.kernel_plan(bucket, self.m + S.PAD, eff)
+            req = BT.resolve_impl(self.impl)
+            if eff != req:
+                plan = plan._replace(degraded_from=req)
             self.kernel_plans[bucket] = plan
             fn = partial(S.divmod_batch, impl=plan.impl)
             if self.capture_profiles:
@@ -66,7 +96,7 @@ class BigintDivisionService:
             return BT.sharded_jit(fn, self.mesh,
                                   batched_argnums=(0, 1), n_args=2,
                                   n_out=2)
-        return self._fns.get(bucket, build)
+        return self._fns.get(("divmod", bucket, eff), build)
 
     def profile_bucket(self, bucket: int) -> dict:
         """Force-compile one bucket (trace only, no execution) and
@@ -74,21 +104,34 @@ class BigintDivisionService:
         self._fn(bucket)
         return self.static_profiles.get(bucket, {})
 
-    def divide(self, us: list[int], vs: list[int]):
-        """Exact (q, r) lists for batched u/v (v > 0)."""
-        n = len(us)
-        assert n == len(vs) and n > 0
+    def divide(self, us: list[int], vs: list[int], *,
+               impl: str | None = None):
+        """Exact (q, r) lists for batched u/v (v > 0; v = 0 follows
+        the documented total extension (q, r) = (0, u)).
+
+        `impl` overrides the service impl for this call -- the
+        serving frontend's degradation ladder uses it to route a
+        request down `kernels/ops.py:fallback_chain` when a kernel is
+        quarantined (every impl is bit-identical, so the override
+        never changes results)."""
+        n = self.validate("divmod", (us, vs))
+        if n == 0:
+            return [], []
         self.telemetry.record_request("divmod", n)
         qs, rs = [], []
         for lo, hi, bucket in self.batcher.plan(n):
+            eff = BT.resolve_impl(impl or self.impl)
+            self._fire("transfer", op="divmod", bucket=bucket)
             u_pad = BT.pad_ints(us[lo:hi], bucket, 0)
             v_pad = BT.pad_ints(vs[lo:hi], bucket, 1)
             ua = jnp.asarray(bi.batch_from_ints(u_pad, self.m))
             va = jnp.asarray(bi.batch_from_ints(v_pad, self.m))
-            fn = self._fn(bucket)
+            fn = self._fn(bucket, impl)
             self.telemetry.record_rows(bucket, hi - lo)
             with OBS.annotate(f"bigint_service/divmod/b{bucket}"), \
                     self.telemetry.chunk_timer("divmod", bucket):
+                self._fire("execute", op="divmod", bucket=bucket,
+                           impl=eff)
                 q, r = fn(ua, va)
                 q, r = np.asarray(q), np.asarray(r)
             keep = hi - lo

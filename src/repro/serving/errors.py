@@ -1,0 +1,218 @@
+"""Exception taxonomy + failure classification for the serving tier.
+
+Every failure the serving stack can surface maps onto one typed
+exception here, and `classify` collapses any raised exception --
+typed, injected (serving/faults.py), or a raw backend error -- into
+one of the POLICY CLASSES the frontend acts on:
+
+  invalid    caller error (bad type/range/shape).  Never retried,
+             never counted against kernels; raised synchronously at
+             admission where possible.
+  overload   typed admission rejection (`Overloaded`).  The caller
+             sheds load / backs off; nothing was enqueued.
+  deadline   the request's deadline expired (`DeadlineExceeded`).
+             Not-yet-submitted chunks are cancelled cooperatively.
+  transient  plausibly succeeds on retry with the SAME kernel (a
+             transfer hiccup, UNAVAILABLE/ABORTED runtime states).
+             Policy: capped, jittered retry-with-backoff.
+  kernel     the kernel path itself is broken at this (impl, bucket,
+             precision) -- a Pallas/Mosaic compile rejection, an OOM
+             (RESOURCE_EXHAUSTED), an unsupported lowering.  Policy:
+             quarantine the triple and degrade down the registry
+             ladder (`kernels/ops.py:fallback_impl`); retrying the
+             same executable would fail identically.
+  fatal      everything else.  Propagated to the caller unretried.
+
+The classification of RAW backend exceptions is by message marker
+(Mosaic/XLA do not export a stable exception hierarchy); the typed
+exceptions injected by the fault harness and raised by the frontend
+classify structurally, so tests exercise the same policy paths real
+hardware failures take.
+
+Validation helpers (`check_operands`, `check_lengths`) raise
+index-carrying `InvalidRequest` subtypes that ALSO subclass the
+builtin the pre-taxonomy services raised (`OverflowError` /
+`TypeError` / `ValueError`), so existing callers' except clauses keep
+working.
+"""
+
+from __future__ import annotations
+
+# Policy classes, in the order `classify` resolves them.
+CLASSES = ("invalid", "overload", "deadline", "transient", "kernel",
+           "fatal")
+
+
+class ServingError(Exception):
+    """Base of every typed serving-tier failure."""
+
+
+class Overloaded(ServingError):
+    """Typed admission rejection: queue depth or queued-work estimate
+    exceeds policy.  Carries enough for the caller to back off."""
+
+    def __init__(self, message: str = "", *, reason: str = "",
+                 depth: int = 0, limit: int = 0):
+        self.reason = reason
+        self.depth = depth
+        self.limit = limit
+        super().__init__(
+            message or f"overloaded ({reason}): depth {depth} >= "
+                       f"limit {limit}")
+
+
+class DeadlineExceeded(ServingError, TimeoutError):
+    """The request's deadline expired before all its chunks ran.
+
+    `completed`/`total` account for partial progress: chunks that had
+    already executed when the deadline fired are counted (their
+    results are dropped -- the request fails atomically), chunks not
+    yet submitted were cancelled cooperatively."""
+
+    def __init__(self, message: str = "", *, op: str = "",
+                 completed: int = 0, total: int = 0):
+        self.op = op
+        self.completed = completed
+        self.total = total
+        super().__init__(
+            message or f"deadline exceeded ({op}): {completed}/{total} "
+                       f"items completed before expiry")
+
+
+class RequestCancelled(ServingError):
+    """The frontend stopped before the request ran."""
+
+
+class InvalidRequest(ServingError, ValueError):
+    """Caller error: malformed request (shape/type/range)."""
+
+
+class OperandRangeError(InvalidRequest, OverflowError):
+    """An operand is outside the service's representable range.
+
+    Subclasses OverflowError for compatibility with the pre-taxonomy
+    services, which raised bare OverflowError for oversized operands."""
+
+
+class OperandTypeError(InvalidRequest, TypeError):
+    """An operand is not a Python int."""
+
+
+class KernelFault(ServingError):
+    """Base of kernel-path failures, real or injected.  Carries the
+    (site, op, bucket, impl) identity the degradation ladder and
+    telemetry key on."""
+
+    def __init__(self, message: str = "", *, site: str = "execute",
+                 op: str | None = None, bucket: int | None = None,
+                 impl: str | None = None, transient: bool = False):
+        self.site = site
+        self.op = op
+        self.bucket = bucket
+        self.impl = impl
+        self.transient = transient
+        super().__init__(
+            message or f"{type(self).__name__} at {site} "
+                       f"(op={op}, bucket={bucket}, impl={impl})")
+
+
+class CompileFault(KernelFault):
+    """A bucket executable failed to compile (Mosaic rejection, XLA
+    lowering error).  Always classifies `kernel`: the same (impl,
+    bucket, precision) will fail identically, so degrade."""
+
+    def __init__(self, message: str = "", **kw):
+        kw.setdefault("site", "compile")
+        kw["transient"] = False
+        super().__init__(message, **kw)
+
+
+class ExecuteFault(KernelFault):
+    """A compiled executable failed at launch/run time.  `transient`
+    picks the policy: retry (True) vs quarantine-and-degrade (False,
+    e.g. a deterministic OOM at this geometry)."""
+
+
+class TransferFault(KernelFault):
+    """Host<->device transfer failure while packing operands.
+    Transient by default (retry re-issues the transfer)."""
+
+    def __init__(self, message: str = "", **kw):
+        kw.setdefault("site", "transfer")
+        kw.setdefault("transient", True)
+        super().__init__(message, **kw)
+
+
+class PrecomputeFault(KernelFault):
+    """Barrett-context precompute (the per-modulus shinv) failed.
+    Transient by default: the precompute is stateless and retryable."""
+
+    def __init__(self, message: str = "", **kw):
+        kw.setdefault("site", "precompute")
+        kw.setdefault("transient", True)
+        super().__init__(message, **kw)
+
+
+# Message markers for RAW backend exceptions (no stable hierarchy to
+# type-match on).  KERNEL markers first: an OOM string also mentions
+# "resource", and quarantine+degrade is the right policy for it.
+_KERNEL_MARKERS = ("RESOURCE_EXHAUSTED", "out of memory", "OOM",
+                   "Mosaic", "mosaic", "UNIMPLEMENTED", "Unsupported",
+                   "failed to compile", "Failed to compile",
+                   "XLA compilation")
+_TRANSIENT_MARKERS = ("UNAVAILABLE", "ABORTED", "DEADLINE_EXCEEDED",
+                      "connection reset", "transfer failed")
+
+
+def classify(exc: BaseException) -> str:
+    """Collapse any exception into one policy class (see CLASSES)."""
+    if isinstance(exc, Overloaded):
+        return "overload"
+    if isinstance(exc, DeadlineExceeded):
+        return "deadline"
+    if isinstance(exc, (InvalidRequest, TypeError, ValueError,
+                        OverflowError)):
+        return "invalid"
+    if isinstance(exc, CompileFault):
+        return "kernel"
+    if isinstance(exc, KernelFault):
+        return "transient" if exc.transient else "kernel"
+    if isinstance(exc, ServingError):
+        return "fatal"
+    text = f"{type(exc).__name__}: {exc}"
+    if any(m in text for m in _KERNEL_MARKERS):
+        return "kernel"
+    if any(m in text for m in _TRANSIENT_MARKERS):
+        return "transient"
+    return "fatal"
+
+
+# ---------------------------------------------------------------------------
+# request validation (shared by both services)
+# ---------------------------------------------------------------------------
+
+def check_lengths(columns, names=None) -> int:
+    """All request columns must be equal-length; returns that length."""
+    n = len(columns[0])
+    for i, col in enumerate(columns[1:], start=1):
+        if len(col) != n:
+            a = names[0] if names else "column 0"
+            b = names[i] if names else f"column {i}"
+            raise InvalidRequest(
+                f"mismatched request columns: len({a}) = {n}, "
+                f"len({b}) = {len(col)}")
+    return n
+
+
+def check_operands(name: str, xs, limit: int, what: str) -> None:
+    """Every x in xs must be a Python int in [0, limit).  Error
+    messages carry the offending index so callers of a 10^5-row batch
+    can find the bad row."""
+    for i, x in enumerate(xs):
+        if isinstance(x, bool) or not isinstance(x, int):
+            raise OperandTypeError(
+                f"{name}[{i}]: expected int, got {type(x).__name__}")
+        if not 0 <= x < limit:
+            raise OperandRangeError(
+                f"{name}[{i}] out of range: expected 0 <= {name} < "
+                f"{what}, got {x if abs(x) < 1 << 80 else hex(x)}")

@@ -23,6 +23,7 @@ per-bucket latency, and the Barrett context cache
 
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from functools import partial
 
@@ -35,6 +36,7 @@ from repro.core import modarith as MA
 from repro.obs import telemetry as OBS
 from repro.utils import jaxpr_stats as JS
 from . import batching as BT
+from . import errors as E
 
 
 class ModArithService:
@@ -59,7 +61,7 @@ class ModArithService:
                  e_limbs: int | None = None,
                  batch_buckets=(64, 256, 1024),
                  max_cached_moduli: int = 64,
-                 capture_profiles: bool = True):
+                 capture_profiles: bool = True, faults=None):
         self.m = m_limbs
         self.e_limbs = e_limbs if e_limbs is not None else m_limbs
         self.mesh = mesh
@@ -75,6 +77,7 @@ class ModArithService:
         # captured at the same moment (a CompiledBuckets miss)
         self.static_profiles: dict[int, dict] = {}
         self._ctxs: OrderedDict[int, MA.BarrettContext] = OrderedDict()
+        self._ctx_lock = threading.RLock()
         self.max_cached = max_cached_moduli
         self.ctx_hits = 0
         self.ctx_misses = 0
@@ -84,30 +87,56 @@ class ModArithService:
             "ctx_cache_total", "Barrett context cache events", ("event",))
         self._precompute = jax.jit(partial(
             MA.barrett_precompute, impl=impl, windowed=windowed))
+        self.faults = faults            # serving/faults.FaultInjector
+
+    def set_fault_injector(self, faults) -> None:
+        """Install (or clear, with None) a fault injector; the
+        injection sites below are exact no-ops without one."""
+        self.faults = faults
+
+    def _fire(self, site: str, **labels) -> None:
+        if self.faults is not None:
+            self.faults.fire(site, **labels)
 
     # -- per-modulus context cache ----------------------------------------
 
-    def context(self, v: int) -> MA.BarrettContext:
-        """Device-resident Barrett context for v, LRU-cached."""
+    def check_modulus(self, v) -> None:
+        if isinstance(v, bool) or not isinstance(v, int):
+            raise E.OperandTypeError(
+                f"modulus: expected int, got {type(v).__name__}")
         if v <= 0:
-            raise ValueError("modulus must be positive")
+            raise E.InvalidRequest("modulus must be positive")
         if v >= bi.BASE ** self.m:
-            raise OverflowError(f"modulus does not fit in {self.m} limbs")
-        if v in self._ctxs:
-            self._ctxs.move_to_end(v)
-            self.ctx_hits += 1
-            self._ctx_metric.labels(event="hit").inc()
-            return self._ctxs[v]
-        self.ctx_misses += 1
-        self._ctx_metric.labels(event="miss").inc()
-        with OBS.annotate("modexp_service/precompute"):
-            ctx = self._precompute(jnp.asarray(bi.from_int(v, self.m)))
-        self._ctxs[v] = ctx
-        while len(self._ctxs) > self.max_cached:
-            self._ctxs.popitem(last=False)
-            self.ctx_evictions += 1
-            self._ctx_metric.labels(event="eviction").inc()
-        return ctx
+            raise E.OperandRangeError(
+                f"modulus does not fit in {self.m} limbs")
+
+    def context(self, v: int) -> MA.BarrettContext:
+        """Device-resident Barrett context for v, LRU-cached.
+
+        Thread-safe: the lock covers lookup, precompute, insert, and
+        eviction, so concurrent requests against one modulus cannot
+        double-precompute the shinv or corrupt the OrderedDict (a
+        first-touch precompute serializes other moduli too -- the
+        price of exactly-once precompute)."""
+        self.check_modulus(v)
+        with self._ctx_lock:
+            if v in self._ctxs:
+                self._ctxs.move_to_end(v)
+                self.ctx_hits += 1
+                self._ctx_metric.labels(event="hit").inc()
+                return self._ctxs[v]
+            self._fire("precompute")
+            self.ctx_misses += 1
+            self._ctx_metric.labels(event="miss").inc()
+            with OBS.annotate("modexp_service/precompute"):
+                ctx = self._precompute(
+                    jnp.asarray(bi.from_int(v, self.m)))
+            self._ctxs[v] = ctx
+            while len(self._ctxs) > self.max_cached:
+                self._ctxs.popitem(last=False)
+                self.ctx_evictions += 1
+                self._ctx_metric.labels(event="eviction").inc()
+            return ctx
 
     # -- compiled per-bucket executables ----------------------------------
 
@@ -119,11 +148,16 @@ class ModArithService:
             mu=jnp.zeros((MA.barrett_width(self.m),), jnp.uint32),
             k=jnp.zeros((), jnp.int32))
 
-    def _fn(self, op: str, bucket: int):
+    def _fn(self, op: str, bucket: int, impl: str | None = None):
+        eff = BT.resolve_impl(impl or self.impl)
+
         def build():
+            self._fire("compile", op=op, bucket=bucket, impl=eff)
             # widest internal product: x * mu at the Barrett working width
-            plan = BT.kernel_plan(bucket, MA.barrett_width(self.m),
-                                  self.impl)
+            plan = BT.kernel_plan(bucket, MA.barrett_width(self.m), eff)
+            req = BT.resolve_impl(self.impl)
+            if eff != req:
+                plan = plan._replace(degraded_from=req)
             self.kernel_plans[bucket] = plan
             impl = plan.impl
             if op == "reduce":
@@ -147,7 +181,7 @@ class ModArithService:
                     JS.trace_profile(f, self._zero_ctx(), *zs)
             return BT.sharded_jit(f, self.mesh, batched,
                                   n_args=1 + len(widths), n_out=1)
-        return self._fns.get((op, bucket), build)
+        return self._fns.get((op, bucket, eff), build)
 
     def profile_bucket(self, op: str, bucket: int) -> dict:
         """Force-compile one (op, bucket) executable (trace only, no
@@ -155,42 +189,83 @@ class ModArithService:
         self._fn(op, bucket)
         return self.static_profiles.get(bucket, {})
 
-    def _run(self, op: str, v: int, columns, widths) -> list[int]:
-        """Pack int columns to limb batches, run per bucket, unpack."""
-        n = len(columns[0])
-        assert n > 0 and all(len(c) == n for c in columns)
+    # column names and operand limits per op, for index-carrying
+    # validation messages (exponents are bounded by the ladder's
+    # e_limbs storage width, not the modulus width)
+    def _op_schema(self, op: str):
+        lim = bi.BASE ** self.m
+        if op == "reduce":
+            lim2 = bi.BASE ** (2 * self.m)
+            return (("x", lim2, f"B^{2 * self.m}"),)
+        if op == "modmul":
+            return (("a", lim, f"B^{self.m}"),
+                    ("b", lim, f"B^{self.m}"))
+        if op == "modexp":
+            return (("a", lim, f"B^{self.m}"),
+                    ("e", bi.BASE ** self.e_limbs,
+                     f"B^{self.e_limbs}"))
+        raise E.InvalidRequest(f"unknown op {op!r} for ModArithService")
+
+    def validate(self, op: str, columns, v=None) -> int:
+        """Full request validation (types, ranges, column lengths,
+        modulus); returns the request length.  Raises serving.errors
+        InvalidRequest subtypes carrying the offending index."""
+        schema = self._op_schema(op)
+        if len(columns) != len(schema):
+            raise E.InvalidRequest(
+                f"{op} takes {len(schema)} columns, got {len(columns)}")
+        n = E.check_lengths(columns, names=[s[0] for s in schema])
+        for col, (name, lim, what) in zip(columns, schema):
+            E.check_operands(name, col, lim, what)
+        if v is not None:
+            self.check_modulus(v)
+        return n
+
+    def _run(self, op: str, v: int, columns, widths, *,
+             impl: str | None = None) -> list[int]:
+        """Pack int columns to limb batches, run per bucket, unpack.
+
+        `impl` overrides the service impl for this call (the serving
+        frontend's degradation ladder; bit-identical by contract)."""
+        n = self.validate(op, columns, v)
+        if n == 0:
+            return []
         self.telemetry.record_request(op, n)
         ctx = self.context(v)
         out: list[int] = []
         for lo, hi, bucket in self.batcher.plan(n):
+            eff = BT.resolve_impl(impl or self.impl)
+            self._fire("transfer", op=op, bucket=bucket)
             arrs = [jnp.asarray(bi.batch_from_ints(
                         BT.pad_ints(col[lo:hi], bucket, 0), w))
                     for col, w in zip(columns, widths)]
-            fn = self._fn(op, bucket)
+            fn = self._fn(op, bucket, impl)
             self.telemetry.record_rows(bucket, hi - lo)
             with OBS.annotate(f"modexp_service/{op}/b{bucket}"), \
                     self.telemetry.chunk_timer(op, bucket):
+                self._fire("execute", op=op, bucket=bucket, impl=eff)
                 res = np.asarray(fn(ctx, *arrs))
             out += bi.batch_to_ints(res[:hi - lo])
         return out
 
     # -- public entry points ----------------------------------------------
 
-    def reduce(self, xs: list[int], v: int) -> list[int]:
+    def reduce(self, xs: list[int], v: int, *,
+               impl: str | None = None) -> list[int]:
         """[x mod v] for double-width x (x < B^(2 m_limbs))."""
-        for x in xs:
-            if not 0 <= x < bi.BASE ** (2 * self.m):
-                raise OverflowError(
-                    f"reduce operand exceeds {2 * self.m} limbs")
-        return self._run("reduce", v, [xs], [2 * self.m])
+        return self._run("reduce", v, [xs], [2 * self.m], impl=impl)
 
-    def modmul(self, a: list[int], b: list[int], v: int) -> list[int]:
+    def modmul(self, a: list[int], b: list[int], v: int, *,
+               impl: str | None = None) -> list[int]:
         """[(a_i * b_i) mod v] for a_i, b_i < B^m_limbs."""
-        return self._run("modmul", v, [a, b], [self.m, self.m])
+        return self._run("modmul", v, [a, b], [self.m, self.m],
+                         impl=impl)
 
-    def modexp(self, a: list[int], e: list[int], v: int) -> list[int]:
+    def modexp(self, a: list[int], e: list[int], v: int, *,
+               impl: str | None = None) -> list[int]:
         """[pow(a_i, e_i, v)] -- fixed-window ladder, one cached shinv."""
-        return self._run("modexp", v, [a, e], [self.m, self.e_limbs])
+        return self._run("modexp", v, [a, e], [self.m, self.e_limbs],
+                         impl=impl)
 
     # -- introspection ----------------------------------------------------
 

@@ -75,6 +75,72 @@ def test_service_input_validation():
         svc.reduce([B ** 8], 7)
 
 
+def test_empty_requests_are_served_without_compute():
+    """[] in -> [] out, no chunks planned, no precompute, no compile
+    (the n=0 path must never touch the device)."""
+    assert BT.Batcher((4,)).plan(0) == []
+    assert BT.Batcher((4,)).plan(-3) == []
+    svc = ModArithService(m_limbs=4, e_limbs=1, batch_buckets=(2,),
+                          capture_profiles=False)
+    assert svc.reduce([], 7) == []
+    assert svc.modmul([], [], 7) == []
+    assert svc.modexp([], [], 7) == []
+    assert svc.ctx_misses == 0              # no precompute for nothing
+    assert svc._fns.misses == 0             # no executable compiled
+    assert svc.telemetry.stats()["requests"] == {}
+
+    from repro.serving.bigint_service import BigintDivisionService
+    div = BigintDivisionService(m_limbs=4, batch_buckets=(2,),
+                                capture_profiles=False)
+    assert div.divide([], []) == ([], [])
+    assert div._fns.misses == 0
+
+
+def test_validation_rejects_types_and_ranges_with_index():
+    """Hardened validation: every operand is range-checked against the
+    op's schema BEFORE any device work, errors carry the offending
+    index, and non-ints (including bools) are rejected uniformly."""
+    from repro.serving import errors as E
+    svc = ModArithService(m_limbs=2, e_limbs=1, batch_buckets=(2,),
+                          capture_profiles=False)
+    v = 1000003
+    # type errors carry the column name and index
+    with pytest.raises(TypeError, match=r"a\[1\].*float"):
+        svc.modmul([1, 2.5], [3, 4], v)
+    with pytest.raises(TypeError, match=r"x\[0\].*bool"):
+        svc.reduce([True], v)
+    with pytest.raises(TypeError, match="modulus"):
+        svc.reduce([1], 7.0)
+    # range errors too (negative and too-large; modmul bound is B^m)
+    with pytest.raises(OverflowError, match=r"b\[2\]"):
+        svc.modmul([1, 1, 1], [0, 0, B ** 2], v)
+    with pytest.raises(OverflowError, match=r"x\[1\]"):
+        svc.reduce([5, -1], v)
+    # exponents are bounded by e_limbs storage, not the modulus width
+    with pytest.raises(OverflowError, match=r"e\[0\]"):
+        svc.modexp([1], [B], v)
+    svc.modexp([1], [B - 1], v)             # in e_limbs range: fine
+    # mismatched column lengths name both columns
+    with pytest.raises(ValueError, match=r"len\(a\) = 2.*len\(b\) = 1"):
+        svc.modmul([1, 2], [3], v)
+    # everything above was rejected before compute
+    assert svc._fns.misses <= 1             # only the valid modexp
+    assert svc.ctx_misses <= 1
+
+    from repro.serving.bigint_service import BigintDivisionService
+    div = BigintDivisionService(m_limbs=2, batch_buckets=(2,),
+                                capture_profiles=False)
+    with pytest.raises(TypeError, match=r"u\[0\]"):
+        div.divide(["9"], [3])
+    with pytest.raises(OverflowError, match=r"v\[1\]"):
+        div.divide([1, 2], [3, B ** 2])
+    with pytest.raises(ValueError, match="mismatched"):
+        div.divide([1, 2], [3])
+    # all typed errors are serving-taxonomy InvalidRequest subtypes
+    with pytest.raises(E.InvalidRequest):
+        div.divide([1], [-1])
+
+
 def test_service_same_ladder_different_exponents():
     """Padding exponents of different bit lengths must stay exact
     (constant trip count, where-masked windows)."""
